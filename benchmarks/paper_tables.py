@@ -1,0 +1,161 @@
+"""Reproductions of the paper's evaluation (§IV, Table I, Fig. 2a/2b).
+
+The paper's design: two-way sweeps of each Table-I knob against the
+working-pool size {4112, 4128, 4160, 4192} for a 4096-server job with 16
+warm standbys, measuring total training time (lower = better).
+
+We run the exact Table-I values at the full 4096-server scale using the
+vectorized CTMC engine (validated against the event-driven engine in
+tests/test_vectorized.py) with the event engine cross-checking a subset.
+Job length is 32 days (the paper's is illustrative — "e.g., 256 days" —
+and enters total time linearly; noted in EXPERIMENTS.md).
+
+Expected qualitative results (asserted in tests/test_paper_claims.py):
+  * training time increases with recovery time (Fig 2a);
+  * training time increases with spare-pool waiting time, most at the
+    smallest working pool (Fig 2b);
+  * +32 servers over minimum suffice — larger pools give ~no further gain;
+  * the other knobs are ~flat in this over-provisioned regime.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import MINUTES_PER_DAY, Params
+from repro.core.params import PAPER_TABLE1_RANGES
+from repro.core.vectorized import simulate_ctmc
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+POOL_SIZES = [4112, 4128, 4160, 4192]
+JOB_DAYS = 32
+N_REPLICAS = 256
+
+
+def paper_params(**kw) -> Params:
+    base = dict(job_length=JOB_DAYS * MINUTES_PER_DAY)
+    base.update(kw)
+    return Params(**base)
+
+
+def _sweep_cell(p: Params, n_replicas: int = N_REPLICAS) -> Dict[str, float]:
+    out = simulate_ctmc(p, n_replicas=n_replicas, seed=0)
+    return {
+        "total_time_hours": float(out["total_time"].mean()) / 60.0,
+        "total_time_ci95_hours": float(
+            1.96 * out["total_time"].std() / np.sqrt(n_replicas)) / 60.0,
+        "n_failures": float(out["n_failures"].mean()),
+        "n_preemptions": float(out["n_preemptions"].mean()),
+        "stall_hours": float(out["stall_time"].mean()) / 60.0,
+        "overhead_fraction": float(
+            1.0 - out["useful_work"].mean() / out["total_time"].mean()),
+    }
+
+
+def two_way_sweep(param: str, values: Sequence[float],
+                  pools: Sequence[int] = POOL_SIZES,
+                  n_replicas: int = N_REPLICAS) -> List[Dict]:
+    rows = []
+    for v in values:
+        for pool in pools:
+            if param == "systematic_failure_rate_multiplier":
+                p = paper_params(working_pool_size=pool)
+                p = p.replace(systematic_failure_rate=v * p.random_failure_rate)
+            else:
+                p = paper_params(working_pool_size=pool, **{param: v})
+            cell = _sweep_cell(p, n_replicas)
+            rows.append({param: v, "working_pool_size": pool, **cell})
+    return rows
+
+
+def _write_csv(rows: List[Dict], path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+
+def _plot(rows: List[Dict], param: str, path: str, title: str) -> None:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return
+    fig, ax = plt.subplots(figsize=(7, 4))
+    pools = sorted({r["working_pool_size"] for r in rows})
+    for pool in pools:
+        sub = [r for r in rows if r["working_pool_size"] == pool]
+        xs = [r[param] for r in sub]
+        ys = [r["total_time_hours"] for r in sub]
+        es = [r["total_time_ci95_hours"] for r in sub]
+        ax.errorbar(xs, ys, yerr=es, marker="o", label=f"pool={pool}")
+    ax.set_xlabel(param)
+    ax.set_ylabel("total training time (hours)")
+    ax.set_title(title)
+    ax.legend()
+    fig.tight_layout()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fig.savefig(path, dpi=110)
+    plt.close(fig)
+
+
+def fig2a(n_replicas: int = N_REPLICAS) -> List[Dict]:
+    """Training time vs recovery time x pool size (paper Fig 2a)."""
+    rows = two_way_sweep("recovery_time",
+                         PAPER_TABLE1_RANGES["recovery_time"],
+                         n_replicas=n_replicas)
+    _write_csv(rows, f"{RESULTS_DIR}/fig2a_recovery_time.csv")
+    _plot(rows, "recovery_time", f"{RESULTS_DIR}/fig2a_recovery_time.png",
+          "Fig 2a: total training time vs recovery time")
+    return rows
+
+
+def fig2b(n_replicas: int = N_REPLICAS) -> List[Dict]:
+    """Training time vs spare-pool waiting time x pool size (Fig 2b)."""
+    rows = two_way_sweep("waiting_time",
+                         PAPER_TABLE1_RANGES["waiting_time"],
+                         n_replicas=n_replicas)
+    _write_csv(rows, f"{RESULTS_DIR}/fig2b_waiting_time.csv")
+    _plot(rows, "waiting_time", f"{RESULTS_DIR}/fig2b_waiting_time.png",
+          "Fig 2b: total training time vs spare-pool waiting time")
+    return rows
+
+
+#: the "all other knobs" of Table I (the paper's flat-sensitivity finding)
+SENSITIVITY_PARAMS = [
+    "random_failure_rate", "systematic_failure_rate_multiplier",
+    "systematic_failure_fraction", "warm_standbys", "host_selection_time",
+    "automated_repair_probability", "auto_repair_failure_probability",
+    "manual_repair_failure_probability", "auto_repair_time",
+    "manual_repair_time", "spare_pool_size", "diagnosis_probability",
+]
+
+
+def sensitivity(n_replicas: int = 128,
+                pools: Sequence[int] = (4112, 4160)) -> List[Dict]:
+    """Table-I grid: every remaining knob x pool size; effect sizes."""
+    all_rows: List[Dict] = []
+    for param in SENSITIVITY_PARAMS:
+        rows = two_way_sweep(param, PAPER_TABLE1_RANGES[param], pools,
+                             n_replicas)
+        for r in rows:
+            r["parameter"] = param
+            r["value"] = r.pop(param)
+        all_rows.extend(rows)
+    _write_csv(all_rows, f"{RESULTS_DIR}/table1_sensitivity.csv")
+    return all_rows
+
+
+def effect_sizes(rows: List[Dict]) -> Dict[str, float]:
+    """Relative spread of training time per parameter (max-min)/min."""
+    out: Dict[str, float] = {}
+    for param in {r["parameter"] for r in rows}:
+        ts = [r["total_time_hours"] for r in rows if r["parameter"] == param]
+        out[param] = (max(ts) - min(ts)) / min(ts)
+    return out

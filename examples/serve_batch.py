@@ -1,0 +1,57 @@
+"""Serving example: batched prefill + decode with KV/SSM caches.
+
+Demonstrates the inference path the decode_* dry-run shapes exercise:
+prefill a batch of prompts, then decode tokens autoregressively against
+the cache — including a hybrid (attention + mamba) architecture whose
+cache carries both KV blocks and SSM states.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+BATCH, PROMPT_LEN, GEN_TOKENS, S_MAX = 4, 24, 12, 64
+
+for arch in ("qwen2.5-3b", "jamba-1.5-large-398b"):
+    cfg = get_config(arch, smoke=True).replace(dtype="float32")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (BATCH, PROMPT_LEN)), jnp.int32)
+
+    # ---- prefill: one pass over the prompts, caches filled --------------
+    cache = bundle.make_cache(BATCH, S_MAX)
+    batch = {"tokens": prompts}
+    t0 = time.perf_counter()
+    logits, cache = bundle.prefill(params, batch, cache)
+    prefill_ms = (time.perf_counter() - t0) * 1e3
+
+    # ---- decode loop ------------------------------------------------------
+    decode = jax.jit(lambda p, t, c, pos: bundle.decode(p, t, c, pos))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    t0 = time.perf_counter()
+    for step in range(GEN_TOKENS - 1):
+        pos = jnp.int32(PROMPT_LEN + step)
+        logits, cache = decode(params, tok, cache, pos)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    decode_ms = (time.perf_counter() - t0) * 1e3 / (GEN_TOKENS - 1)
+
+    out = jnp.concatenate(generated, axis=1)
+    print(f"{arch}: prefill {BATCH}x{PROMPT_LEN} tokens in {prefill_ms:.1f} ms; "
+          f"decode {decode_ms:.1f} ms/token (smoke config, CPU)")
+    print(f"  generated token ids (request 0): {np.asarray(out[0])}")
+    assert out.shape == (BATCH, GEN_TOKENS)
+    assert bool(jnp.isfinite(logits).all())
+print("serving OK")

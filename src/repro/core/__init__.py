@@ -1,0 +1,49 @@
+"""AIReSim core: discrete event simulation of AI-cluster reliability.
+
+The paper's primary contribution (Pattabiraman/Patel/Lin, CS.DC 2026)
+implemented as a composable library:
+
+  * :mod:`engine`        — generator-coroutine DES engine (SimPy-equivalent)
+  * :mod:`params`        — the Params data class (all §III-B inputs)
+  * :mod:`server`        — fleet, per-server state, analytical failure sampler
+  * :mod:`coordinator`   — job execution loop / failure broadcast
+  * :mod:`scheduler`     — host selection, warm standbys, stall handling
+  * :mod:`repair`        — diagnosis -> auto -> manual repair -> retire/return
+  * :mod:`pool`          — working / spare pool bookkeeping
+  * :mod:`metrics`       — RunResult + cross-replication statistics
+  * :mod:`sweeps`        — OneWaySweep / TwoWaySweep experiment harness
+  * :mod:`analytical`    — closed-form cross-checks + Young/Daly cadence
+  * :mod:`vectorized`    — JAX CTMC engine for massive parameter sweeps
+"""
+
+from . import bathtub as _bathtub  # noqa: F401  (registers "bathtub" dist)
+from .analytical import (CheckpointPlan, cluster_failure_rate,
+                         expected_failures, expected_total_time,
+                         plan_checkpoints, repair_shop_occupancy,
+                         spare_capacity_bound, young_daly_interval)
+from .bathtub import Bathtub
+from .multijob import (JobSpec, MultiJobResult, MultiJobSimulation,
+                       simulate_multijob)
+from .trace import TraceEvent, Tracer
+from .distributions import (Deterministic, Distribution, Exponential,
+                            LogNormal, Weibull, make_distribution,
+                            register_distribution)
+from .engine import Environment, Event, Interrupt, Process, Timeout
+from .metrics import RunResult, Stat, aggregate, summarize
+from .params import MINUTES_PER_DAY, PAPER_TABLE1_RANGES, Params, paper_table1_defaults
+from .simulation import ClusterSimulation, simulate, simulate_one
+from .sweeps import OneWaySweep, SweepResult, TwoWaySweep, load_experiment
+
+__all__ = [
+    "Bathtub", "CheckpointPlan", "ClusterSimulation", "Deterministic",
+    "Distribution", "Environment", "Event", "Exponential", "Interrupt",
+    "JobSpec", "LogNormal", "MINUTES_PER_DAY", "MultiJobResult",
+    "MultiJobSimulation", "OneWaySweep", "PAPER_TABLE1_RANGES", "Params",
+    "Process", "RunResult", "Stat", "SweepResult", "Timeout", "TraceEvent",
+    "Tracer", "TwoWaySweep", "Weibull", "aggregate", "cluster_failure_rate",
+    "expected_failures", "expected_total_time", "load_experiment",
+    "make_distribution", "paper_table1_defaults", "plan_checkpoints",
+    "register_distribution", "repair_shop_occupancy", "simulate",
+    "simulate_multijob", "simulate_one", "spare_capacity_bound", "summarize",
+    "young_daly_interval",
+]

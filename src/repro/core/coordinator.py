@@ -1,0 +1,167 @@
+"""Coordinator module: the job-execution loop and failure broadcast.
+
+Paper §III-C module (2): "Coordinator: ... When a server fails, the
+coordinator is notified. In turn, it informs the other servers in the group
+of the failure, and asks them to stop executing the job (and initiate a
+fast recovery)."
+
+In the analytical-failure formulation (see server.py), "informing all other
+servers" is the act of ending the current compute phase: all failure clocks
+stop, progress since the phase start is banked (minus optional checkpoint
+rollback loss), the failed server is diagnosed and dispatched to repair, a
+replacement is acquired through the Scheduler waterfall, the recovery cost
+is paid, and a fresh phase begins (restarting every failure clock — the
+paper's "failure process starts when a job is started on a server").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Generator, List, Optional
+
+import numpy as np
+
+from .engine import Environment
+from .metrics import RunResult
+from .params import Params
+from .repair import RepairShop
+from .scheduler import Scheduler
+from .server import FailureSampler, Server, ServerState
+
+
+class Coordinator:
+    def __init__(self, env: Environment, params: Params,
+                 rng: np.random.Generator, metrics: RunResult,
+                 scheduler: Scheduler, repair_shop: RepairShop,
+                 sampler: FailureSampler):
+        self.env = env
+        self.params = params
+        self.rng = rng
+        self.metrics = metrics
+        self.scheduler = scheduler
+        self.repair_shop = repair_shop
+        self.sampler = sampler
+        # running servers partitioned by health class for O(1) sampling;
+        # _pos maps sid -> (insertion-time bad flag, index) for swap-remove
+        self.running_good: List[Server] = []
+        self.running_bad: List[Server] = []
+        self._pos: dict = {}
+        self.remaining_work: float = params.job_length
+
+    # -- helpers -------------------------------------------------------------
+    def _add_running(self, server: Server) -> None:
+        lst = self.running_bad if server.is_bad else self.running_good
+        self._pos[server.sid] = (server.is_bad, len(lst))
+        lst.append(server)
+
+    def _remove_running(self, server: Server) -> None:
+        flag, idx = self._pos.pop(server.sid)
+        lst = self.running_bad if flag else self.running_good
+        last = lst.pop()
+        if last is not server:
+            lst[idx] = last
+            self._pos[last.sid] = (flag, idx)
+
+    def rebuild_running_partition(self) -> None:
+        """Called after a bad-set regeneration re-flags servers."""
+        servers = self.running_good + self.running_bad
+        self.running_good = []
+        self.running_bad = []
+        self._pos.clear()
+        for s in servers:
+            self._add_running(s)
+
+    def _diagnose(self, failed: Server) -> Optional[Server]:
+        """Return the server to send to repair (None = undiagnosed)."""
+        p = self.params
+        if self.rng.random() >= p.diagnosis_probability:
+            self.metrics.n_undiagnosed += 1
+            return None
+        if p.diagnosis_uncertainty > 0 and self.rng.random() < p.diagnosis_uncertainty:
+            # wrong server fingered: a random *other* running server
+            pool = self.running_good + self.running_bad
+            others = [s for s in pool if s is not failed]
+            if others:
+                self.metrics.n_misdiagnosed += 1
+                return others[int(self.rng.integers(len(others)))]
+        return failed
+
+    def _bank_progress(self, phase_start: float) -> None:
+        """Credit work done in the ended phase, minus checkpoint rollback."""
+        p = self.params
+        progress = self.env.now - phase_start
+        lost = 0.0
+        if p.checkpoint_interval > 0:
+            # work past the last completed checkpoint is rolled back
+            lost = math.fmod(progress, p.checkpoint_interval)
+        self.metrics.lost_work += lost
+        self.remaining_work -= (progress - lost)
+        self.metrics.useful_work += (progress - lost)
+        self.metrics.run_durations.append(progress)
+
+    # -- the job ------------------------------------------------------------------
+    def run_job(self) -> Generator:
+        p, m, env = self.params, self.metrics, self.env
+
+        running = yield from self.scheduler.initial_allocation()
+        for server in running:
+            self._add_running(server)
+
+        while self.remaining_work > 1e-9:
+            if env.now >= p.max_sim_time:
+                m.timed_out = True
+                break
+            phase_start = env.now
+            if p.standbys_can_fail and self.scheduler.standbys:
+                standby_good = [s for s in self.scheduler.standbys if not s.is_bad]
+                standby_bad = [s for s in self.scheduler.standbys if s.is_bad]
+                ttf, failed, is_systematic = self.sampler.sample_first_failure(
+                    self.running_good + standby_good,
+                    self.running_bad + standby_bad)
+            else:
+                ttf, failed, is_systematic = self.sampler.sample_first_failure(
+                    self.running_good, self.running_bad)
+
+            if ttf >= self.remaining_work:
+                # phase runs to completion
+                yield env.timeout(self.remaining_work)
+                m.run_durations.append(self.remaining_work)
+                m.useful_work += self.remaining_work
+                self.remaining_work = 0.0
+                break
+
+            yield env.timeout(ttf)
+
+            # ---- failure: coordinator stops the group --------------------
+            m.n_failures += 1
+            if is_systematic:
+                m.n_systematic_failures += 1
+            else:
+                m.n_random_failures += 1
+            assert failed is not None
+            failed.record_failure(env.now, is_systematic)
+            self._bank_progress(phase_start)
+
+            # a failed standby (standbys_can_fail) just leaves the standby
+            # list; the job itself does not restart
+            if failed.state is ServerState.STANDBY:
+                self.scheduler.standbys.remove(failed)
+                self.repair_shop.submit(failed)
+                continue
+
+            target = self._diagnose(failed)
+            if target is not None:
+                self._remove_running(target)
+                self.repair_shop.submit(target)
+                replacement = yield from self.scheduler.acquire_replacement()
+                self._add_running(replacement)
+
+            # checkpoint reload + restart
+            yield env.timeout(p.recovery_time)
+            m.recovery_overhead += p.recovery_time
+
+        m.total_time = env.now
+        self.scheduler.release_all(self.running_good + self.running_bad)
+        self.running_good.clear()
+        self.running_bad.clear()
+        return m

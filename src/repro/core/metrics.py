@@ -1,0 +1,125 @@
+"""Output metrics of a simulation run (paper §III-B Outputs).
+
+AIReSim reports: (1) total time to train the job, (2) failure counts split
+random/systematic, (3) preemptions, (4) repair counts (auto/manual), and
+(5) run durations between restarts — with mean/median/std/percentiles over
+replications.  We add stall time, host selections, retirements, and wasted
+(recovery/lost) time, which the capacity-planning case study needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclass
+class RunResult:
+    """Raw outputs of a single simulation replication."""
+
+    total_time: float = 0.0            # minutes from t=0 to job completion
+    useful_work: float = 0.0           # == params.job_length on success
+    n_failures: int = 0
+    n_random_failures: int = 0
+    n_systematic_failures: int = 0
+    n_undiagnosed: int = 0
+    n_misdiagnosed: int = 0
+    n_preemptions: int = 0             # spare-pool draws
+    n_auto_repairs: int = 0
+    n_manual_repairs: int = 0
+    n_failed_repairs: int = 0          # silent repair failures
+    n_host_selections: int = 0         # full host-selection rounds (excl. t=0)
+    n_standby_swaps: int = 0
+    n_retired: int = 0
+    stall_time: float = 0.0            # job waiting with zero capacity
+    recovery_overhead: float = 0.0     # sum of recovery_time charges
+    lost_work: float = 0.0             # checkpoint-rollback loss (extension)
+    run_durations: List[float] = field(default_factory=list)
+    timed_out: bool = False            # hit max_sim_time before completing
+
+    @property
+    def overhead_fraction(self) -> float:
+        """Fraction of wall time not spent on useful work."""
+        if self.total_time <= 0:
+            return 0.0
+        return 1.0 - self.useful_work / self.total_time
+
+    @property
+    def effective_utilization(self) -> float:
+        return 1.0 - self.overhead_fraction
+
+    @property
+    def mean_run_duration(self) -> float:
+        return float(np.mean(self.run_durations)) if self.run_durations else 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["mean_run_duration"] = self.mean_run_duration
+        d["overhead_fraction"] = self.overhead_fraction
+        del d["run_durations"]
+        return d
+
+
+#: metric -> extractor used for aggregate statistics
+_SCALAR_METRICS = (
+    "total_time", "n_failures", "n_random_failures", "n_systematic_failures",
+    "n_preemptions", "n_auto_repairs", "n_manual_repairs", "n_failed_repairs",
+    "n_host_selections", "n_standby_swaps", "n_retired", "n_undiagnosed",
+    "n_misdiagnosed", "stall_time", "recovery_overhead", "lost_work",
+    "mean_run_duration", "overhead_fraction",
+)
+
+_PERCENTILES = (25, 50, 75, 90, 99)
+
+
+@dataclass(frozen=True)
+class Stat:
+    mean: float
+    median: float
+    std: float
+    minimum: float
+    maximum: float
+    percentiles: Dict[int, float]
+
+    @classmethod
+    def of(cls, xs: Sequence[float]) -> "Stat":
+        a = np.asarray(list(xs), dtype=np.float64)
+        if a.size == 0:
+            nan = float("nan")
+            return cls(nan, nan, nan, nan, nan, {p: nan for p in _PERCENTILES})
+        return cls(
+            mean=float(a.mean()),
+            median=float(np.median(a)),
+            std=float(a.std(ddof=1)) if a.size > 1 else 0.0,
+            minimum=float(a.min()),
+            maximum=float(a.max()),
+            percentiles={p: float(np.percentile(a, p)) for p in _PERCENTILES},
+        )
+
+    def ci95_halfwidth(self, n: int) -> float:
+        if n <= 1 or math.isnan(self.std):
+            return 0.0
+        return 1.96 * self.std / math.sqrt(n)
+
+
+def aggregate(results: Sequence[RunResult]) -> Dict[str, Stat]:
+    """Cross-replication statistics for every scalar output metric."""
+    out: Dict[str, Stat] = {}
+    for name in _SCALAR_METRICS:
+        out[name] = Stat.of([float(getattr(r, name)) for r in results])
+    # run durations pooled across replications
+    pooled: List[float] = []
+    for r in results:
+        pooled.extend(r.run_durations)
+    out["run_duration_pooled"] = Stat.of(pooled)
+    return out
+
+
+def summarize(results: Sequence[RunResult]) -> Dict[str, float]:
+    """Flat {metric: mean} view — convenient for sweep tables."""
+    agg = aggregate(results)
+    return {name: stat.mean for name, stat in agg.items()}

@@ -1,0 +1,168 @@
+"""Simulation parameters (the paper's `Params` data class).
+
+All thirteen §III-B input parameters are present under the paper's own
+names, with Table-I defaults. Time unit is MINUTES throughout (the paper's
+rates are written per-minute, e.g. ``0.01/(24*60)``).
+
+Extensions beyond the paper are grouped at the bottom and default to the
+paper-faithful behavior (off / equivalent).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+MINUTES_PER_DAY = 24 * 60
+
+
+@dataclass
+class Params:
+    """Input parameters for one cluster-reliability simulation."""
+
+    # ---- failure model (paper inputs 1-2) --------------------------------
+    random_failure_rate: float = 0.01 / MINUTES_PER_DAY
+    #: systematic rate is *additional* on top of random for bad servers
+    systematic_failure_rate: float = 5 * 0.01 / MINUTES_PER_DAY
+    systematic_failure_fraction: float = 0.15
+
+    # ---- recovery / job (paper inputs 3-6) --------------------------------
+    recovery_time: float = 20.0                 # minutes; checkpoint reload + restart
+    job_size: int = 4096                        # servers needed to execute
+    job_length: float = 64 * MINUTES_PER_DAY    # useful compute minutes (paper e.g. 256 days)
+    warm_standbys: int = 16                     # allocated beyond job_size
+
+    # ---- pools (paper inputs 7-8) ------------------------------------------
+    working_pool_size: int = 4160
+    spare_pool_size: int = 200
+
+    # ---- host selection / preemption (Table I) -----------------------------
+    host_selection_time: float = 3.0            # minutes
+    waiting_time: float = 20.0                  # minutes to preempt a spare-pool job
+
+    # ---- repair model (paper inputs 9-11) -----------------------------------
+    auto_repair_time: float = 120.0             # minutes (mean)
+    manual_repair_time: float = 2 * 1440.0      # minutes (mean)
+    auto_repair_failure_probability: float = 0.4
+    manual_repair_failure_probability: float = 0.2
+    #: probability a failure is handled by automated repair (Table I
+    #: "Automated repair probability"); 1-p escalates straight to manual.
+    automated_repair_probability: float = 0.8
+
+    # ---- diagnosis (paper inputs 12-13) -------------------------------------
+    diagnosis_probability: float = 0.8          # failure diagnosed at all
+    diagnosis_uncertainty: float = 0.0          # wrong server identified
+
+    # ---- distributions (assumption 2) ---------------------------------------
+    failure_distribution: str = "exponential"
+    repair_distribution: str = "exponential"
+    distribution_kwargs: Dict[str, Any] = field(default_factory=dict)
+
+    # ---- extensions (default = paper-faithful) ------------------------------
+    #: regenerate the bad-server set every N minutes (assumption 1 case 2);
+    #: 0 disables (fixed bad set).
+    bad_set_regeneration_period: float = 0.0
+    #: retire a server after >= this many failures within retirement_window
+    #: minutes; 0 disables retirement (paper §IV runs without it).
+    retirement_threshold: int = 0
+    retirement_window: float = 7 * MINUTES_PER_DAY
+    #: if True, warm standbys also run failure processes while allocated
+    #: (paper assumption 7 models failures only on executing servers).
+    standbys_can_fail: bool = False
+    #: explicit checkpoint model: if > 0, a failure additionally loses the
+    #: work since the last checkpoint (interval in minutes). 0 = paper model
+    #: (all failure cost folded into recovery_time).
+    checkpoint_interval: float = 0.0
+    #: fixed preemption cost charged per spare-pool server drawn
+    #: (assumption 7: "fixed cost per server ... that was preempted").
+    preemption_cost: float = 0.0
+
+    # ---- experiment control ---------------------------------------------------
+    seed: int = 0
+    max_sim_time: float = 10_000 * MINUTES_PER_DAY  # hard stop (deadlock guard)
+
+    # -------------------------------------------------------------------------
+    def validate(self) -> None:
+        if self.job_size <= 0:
+            raise ValueError("job_size must be positive")
+        if self.working_pool_size < self.job_size:
+            raise ValueError(
+                f"working pool ({self.working_pool_size}) smaller than job "
+                f"({self.job_size}); the job can never be scheduled")
+        if self.warm_standbys < 0 or self.spare_pool_size < 0:
+            raise ValueError("pool sizes must be non-negative")
+        if not 0.0 <= self.systematic_failure_fraction <= 1.0:
+            raise ValueError("systematic_failure_fraction must be in [0,1]")
+        for name in ("auto_repair_failure_probability",
+                     "manual_repair_failure_probability",
+                     "automated_repair_probability",
+                     "diagnosis_probability", "diagnosis_uncertainty"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} must be a probability")
+        for name in ("random_failure_rate", "systematic_failure_rate",
+                     "recovery_time", "job_length", "host_selection_time",
+                     "waiting_time", "auto_repair_time", "manual_repair_time"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be non-negative")
+
+    def replace(self, **kwargs) -> "Params":
+        return dataclasses.replace(self, **kwargs)
+
+    @property
+    def bad_failure_rate(self) -> float:
+        """Total failure rate of a bad server (random + systematic)."""
+        return self.random_failure_rate + self.systematic_failure_rate
+
+    @property
+    def initial_standby_headroom(self) -> int:
+        """Free working-pool servers beyond the job's allocation."""
+        return self.working_pool_size - self.job_size - self.warm_standbys
+
+    def expected_failures_per_minute(self) -> float:
+        """Mean cluster-wide failure rate of the executing servers at t=0."""
+        n_bad = self.systematic_failure_fraction * self.job_size
+        n_good = self.job_size - n_bad
+        return (n_good * self.random_failure_rate
+                + n_bad * self.bad_failure_rate)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Params":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown Params fields: {sorted(unknown)}")
+        return cls(**d)
+
+
+def paper_table1_defaults() -> Params:
+    """The exact Table-I default column (job_length set to 64 days; the
+    paper's job length is illustrative — '(e.g., 256 days)' — and Table I
+    does not pin it)."""
+    return Params()
+
+
+#: Table I "Value Range Considered" — used by the paper-reproduction sweeps.
+PAPER_TABLE1_RANGES: Dict[str, list] = {
+    "random_failure_rate": [0.005 / MINUTES_PER_DAY, 0.01 / MINUTES_PER_DAY,
+                            0.025 / MINUTES_PER_DAY, 0.05 / MINUTES_PER_DAY],
+    "systematic_failure_rate_multiplier": [3, 5, 10],   # x random rate
+    "systematic_failure_fraction": [0.1, 0.15, 0.2],
+    "recovery_time": [10.0, 20.0, 30.0],
+    "warm_standbys": [4, 8, 16, 32],
+    "host_selection_time": [1.0, 3.0, 5.0, 10.0],
+    "waiting_time": [10.0, 20.0, 30.0],
+    "automated_repair_probability": [0.70, 0.80, 0.90],
+    "auto_repair_failure_probability": [0.2, 0.4, 0.6],
+    "manual_repair_failure_probability": [0.1, 0.2, 0.3],
+    "auto_repair_time": [60.0, 120.0, 180.0],
+    "manual_repair_time": [1440.0, 2 * 1440.0, 3 * 1440.0],
+    "working_pool_size": [4112, 4128, 4160, 4192],
+    "spare_pool_size": [200, 300, 400],
+    "diagnosis_probability": [0.6, 0.8, 1.0],
+}

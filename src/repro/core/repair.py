@@ -1,0 +1,102 @@
+"""Repairs module: diagnosis -> automated repair -> manual repair -> return.
+
+Paper §III-C module (4) with assumptions 3-5:
+
+  * upon failure a server first undergoes *automated* repair; with
+    probability ``1 - automated_repair_probability`` the problem is beyond
+    automated scope and the server escalates to *manual* repair (after the
+    automated attempt's time has been spent);
+  * both repair kinds can *silently fail* (status says repaired, problem
+    persists) with their respective failure probabilities;
+  * a successful repair converts a bad server to good (stateless repairs);
+    repairing a good server (random failure / misdiagnosis) is a no-op;
+  * repair durations are exponentially distributed around the configured
+    means (assumption 4); pluggable like failure distributions;
+  * optional score-based retirement: a server exceeding
+    ``retirement_threshold`` failures within ``retirement_window`` minutes
+    is permanently removed instead of reintegrated.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from .distributions import Distribution, make_distribution
+from .engine import Environment
+from .metrics import RunResult
+from .params import Params
+from .server import Server, ServerState
+
+
+class RepairShop:
+    def __init__(self, env: Environment, params: Params,
+                 rng: np.random.Generator, metrics: RunResult,
+                 on_return: Callable[[Server], None],
+                 on_retire: Optional[Callable[[Server], None]] = None):
+        self.env = env
+        self.params = params
+        self.rng = rng
+        self.metrics = metrics
+        self.on_return = on_return
+        self.on_retire = on_retire
+        self.in_repair: set = set()
+        kw = params.distribution_kwargs
+        self._auto_dist: Distribution = make_distribution(
+            params.repair_distribution, params.auto_repair_time, **kw)
+        self._manual_dist: Distribution = make_distribution(
+            params.repair_distribution, params.manual_repair_time, **kw)
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, server: Server) -> None:
+        """Send a failed server through the repair pipeline (async)."""
+        if server in self.in_repair:
+            raise RuntimeError(f"{server!r} already in repair")
+        self.in_repair.add(server)
+        self.env.process(self._repair_process(server),
+                         name=f"repair-{server.sid}")
+
+    @property
+    def n_in_repair(self) -> int:
+        return len(self.in_repair)
+
+    # -- pipeline ----------------------------------------------------------
+    def _repair_process(self, server: Server):
+        p, rng = self.params, self.rng
+        server.n_repairs += 1
+
+        # Stage 1: automated testing + repair (always attempted first).
+        server.state = ServerState.REPAIR_AUTO
+        yield self.env.timeout(self._auto_dist.sample(rng))
+        self.metrics.n_auto_repairs += 1
+
+        if rng.random() < p.automated_repair_probability:
+            # Problem within automated scope; did the repair actually work?
+            success = rng.random() >= p.auto_repair_failure_probability
+        else:
+            # Beyond automated scope -> manual repair (assumption 3).
+            server.state = ServerState.REPAIR_MANUAL
+            yield self.env.timeout(self._manual_dist.sample(rng))
+            self.metrics.n_manual_repairs += 1
+            success = rng.random() >= p.manual_repair_failure_probability
+
+        if success:
+            # Assumption 5: a successful repair makes a bad server good.
+            server.is_bad = False
+        else:
+            self.metrics.n_failed_repairs += 1
+
+        self.in_repair.discard(server)
+
+        # Score-based retirement (extension; off when threshold == 0).
+        if (p.retirement_threshold > 0 and
+                server.failures_in_window(self.env.now, p.retirement_window)
+                >= p.retirement_threshold):
+            self.metrics.n_retired += 1
+            if self.on_retire is not None:
+                self.on_retire(server)
+            return
+
+        # Reintegrate: Scheduler decides job-return vs pool-return.
+        self.on_return(server)

@@ -1,0 +1,77 @@
+"""Top-level ClusterSimulation: wires the five AIReSim modules together.
+
+One ClusterSimulation = one replication: it builds the fleet, pools,
+scheduler, repair shop, and coordinator on a fresh DES environment and
+runs the job to completion, returning a :class:`RunResult`.
+
+``simulate(params, n_replications)`` is the main entry point used by
+sweeps, benchmarks, and tests.
+"""
+
+from __future__ import annotations
+
+from typing import Generator, List, Optional
+
+import numpy as np
+
+from .coordinator import Coordinator
+from .engine import Environment
+from .metrics import RunResult
+from .params import Params
+from .pool import PoolManager
+from .repair import RepairShop
+from .scheduler import Scheduler
+from .server import FailureSampler, Fleet
+
+
+class ClusterSimulation:
+    def __init__(self, params: Params, seed: Optional[int] = None):
+        params.validate()
+        self.params = params
+        self.rng = np.random.default_rng(
+            params.seed if seed is None else seed)
+        self.env = Environment()
+        self.metrics = RunResult()
+        self.fleet = Fleet(params, self.rng)
+        self.pools = PoolManager(params, self.fleet)
+        self.scheduler = Scheduler(self.env, params, self.pools, self.metrics)
+        self.repair_shop = RepairShop(
+            self.env, params, self.rng, self.metrics,
+            on_return=self.scheduler.on_server_return,
+            on_retire=self.scheduler.on_server_retired)
+        self.sampler = FailureSampler(params, self.rng)
+        self.coordinator = Coordinator(
+            self.env, params, self.rng, self.metrics, self.scheduler,
+            self.repair_shop, self.sampler)
+
+    # -- bad-set regeneration (assumption 1, case 2) -------------------------
+    def _regeneration_process(self) -> Generator:
+        period = self.params.bad_set_regeneration_period
+        while True:
+            yield self.env.timeout(period)
+            self.fleet.regenerate_bad_set()
+            self.coordinator.rebuild_running_partition()
+
+    # -- run -----------------------------------------------------------------
+    def run(self) -> RunResult:
+        if self.params.bad_set_regeneration_period > 0:
+            self.env.process(self._regeneration_process(), name="regen")
+        job = self.env.process(self.coordinator.run_job(), name="job")
+        self.env.run_until_process(job)
+        self.metrics.total_time = self.env.now
+        return self.metrics
+
+
+def simulate(params: Params, n_replications: int = 1,
+             base_seed: Optional[int] = None) -> List[RunResult]:
+    """Run independent replications (distinct substreams of ``base_seed``)."""
+    base = params.seed if base_seed is None else base_seed
+    results = []
+    for rep in range(n_replications):
+        sim = ClusterSimulation(params, seed=base + 7919 * rep)
+        results.append(sim.run())
+    return results
+
+
+def simulate_one(params: Params, seed: Optional[int] = None) -> RunResult:
+    return ClusterSimulation(params, seed=seed).run()

@@ -1,0 +1,188 @@
+"""Experiment harness: one-way and two-way parameter sweeps (paper §III-D).
+
+The paper's user-facing API:
+
+    OneWaySweep("Systematic Failure Fraction",
+                "systematic_failure_fraction", [0.1, 0.2, 0.3])
+
+Each sweep point runs ``n_replications`` independent simulations and
+aggregates the paper's output metrics.  TwoWaySweep crosses two parameter
+ranges (the paper's evaluation crosses every knob with working_pool_size).
+Results can be dumped as CSV or JSON; a yaml experiment file is supported
+via :func:`load_experiment`.
+
+Special virtual parameter ``systematic_failure_rate_multiplier`` sets the
+systematic rate as a multiple of the (possibly swept) random rate, the way
+Table I expresses it.
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from .metrics import RunResult, Stat, aggregate
+from .params import Params
+from .simulation import simulate
+
+#: sweep-table columns (means over replications)
+DEFAULT_STATS = ("total_time", "n_failures", "n_random_failures",
+                 "n_systematic_failures", "n_preemptions", "n_auto_repairs",
+                 "n_manual_repairs", "n_host_selections", "stall_time",
+                 "overhead_fraction", "mean_run_duration")
+
+
+def _apply_param(params: Params, name: str, value: Any) -> Params:
+    """Set a (possibly virtual) parameter on a Params copy."""
+    if name == "systematic_failure_rate_multiplier":
+        return params.replace(
+            systematic_failure_rate=value * params.random_failure_rate)
+    if not hasattr(params, name):
+        raise ValueError(f"unknown parameter {name!r}")
+    # preserve int-ness of count-typed fields
+    current = getattr(params, name)
+    if isinstance(current, int) and not isinstance(current, bool):
+        value = int(value)
+    return params.replace(**{name: value})
+
+
+@dataclass
+class SweepPoint:
+    values: Dict[str, Any]
+    results: List[RunResult]
+    stats: Dict[str, Stat]
+
+    def row(self, columns: Sequence[str] = DEFAULT_STATS) -> Dict[str, Any]:
+        out: Dict[str, Any] = dict(self.values)
+        for c in columns:
+            out[c] = self.stats[c].mean
+        out["total_time_ci95"] = self.stats["total_time"].ci95_halfwidth(
+            len(self.results))
+        return out
+
+
+@dataclass
+class SweepResult:
+    name: str
+    parameter_names: List[str]
+    points: List[SweepPoint]
+
+    def to_rows(self, columns: Sequence[str] = DEFAULT_STATS) -> List[Dict[str, Any]]:
+        return [p.row(columns) for p in self.points]
+
+    def write_csv(self, path: str, columns: Sequence[str] = DEFAULT_STATS) -> None:
+        rows = self.to_rows(columns)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w", newline="") as f:
+            writer = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            writer.writeheader()
+            writer.writerows(rows)
+
+    def write_json(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({
+                "name": self.name,
+                "parameters": self.parameter_names,
+                "rows": self.to_rows(),
+            }, f, indent=2)
+
+    def column(self, metric: str) -> List[float]:
+        return [p.stats[metric].mean for p in self.points]
+
+
+class OneWaySweep:
+    """Vary one parameter over a list of values (paper's OneWaySweep)."""
+
+    def __init__(self, title: str, parameter: str, values: Sequence[Any],
+                 n_replications: int = 5, base_params: Optional[Params] = None,
+                 base_seed: int = 0):
+        self.title = title
+        self.parameter = parameter
+        self.values = list(values)
+        self.n_replications = n_replications
+        self.base_params = base_params or Params()
+        self.base_seed = base_seed
+
+    def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
+        points = []
+        for i, v in enumerate(self.values):
+            if progress:
+                progress(f"{self.title}: {self.parameter}={v}")
+            p = _apply_param(self.base_params, self.parameter, v)
+            # common random numbers across points: same seed per replication
+            results = simulate(p, self.n_replications, base_seed=self.base_seed)
+            points.append(SweepPoint({self.parameter: v}, results,
+                                     aggregate(results)))
+        return SweepResult(self.title, [self.parameter], points)
+
+
+class TwoWaySweep:
+    """Cross two parameter ranges (the paper's evaluation design)."""
+
+    def __init__(self, title: str, parameter_a: str, values_a: Sequence[Any],
+                 parameter_b: str, values_b: Sequence[Any],
+                 n_replications: int = 5, base_params: Optional[Params] = None,
+                 base_seed: int = 0):
+        self.title = title
+        self.parameter_a, self.values_a = parameter_a, list(values_a)
+        self.parameter_b, self.values_b = parameter_b, list(values_b)
+        self.n_replications = n_replications
+        self.base_params = base_params or Params()
+        self.base_seed = base_seed
+
+    def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
+        points = []
+        for va in self.values_a:
+            for vb in self.values_b:
+                if progress:
+                    progress(f"{self.title}: {self.parameter_a}={va}, "
+                             f"{self.parameter_b}={vb}")
+                p = _apply_param(self.base_params, self.parameter_a, va)
+                p = _apply_param(p, self.parameter_b, vb)
+                results = simulate(p, self.n_replications,
+                                   base_seed=self.base_seed)
+                points.append(SweepPoint(
+                    {self.parameter_a: va, self.parameter_b: vb},
+                    results, aggregate(results)))
+        return SweepResult(self.title,
+                           [self.parameter_a, self.parameter_b], points)
+
+
+def load_experiment(path: str) -> List[Any]:
+    """Build sweeps from a yaml/json experiment file.
+
+    Schema::
+
+        base_params: {recovery_time: 20, ...}
+        n_replications: 5
+        sweeps:
+          - {title: ..., parameter: ..., values: [...]}                    # one-way
+          - {title: ..., parameter_a: ..., values_a: [...],
+             parameter_b: ..., values_b: [...]}                            # two-way
+    """
+    with open(path) as f:
+        if path.endswith((".yaml", ".yml")):
+            import yaml
+            spec = yaml.safe_load(f)
+        else:
+            spec = json.load(f)
+    base = Params.from_dict(spec.get("base_params", {})) \
+        if spec.get("base_params") else Params()
+    n_rep = int(spec.get("n_replications", 5))
+    sweeps: List[Any] = []
+    for s in spec.get("sweeps", []):
+        if "parameter" in s:
+            sweeps.append(OneWaySweep(s.get("title", s["parameter"]),
+                                      s["parameter"], s["values"],
+                                      n_replications=n_rep, base_params=base))
+        else:
+            sweeps.append(TwoWaySweep(s.get("title", "two-way"),
+                                      s["parameter_a"], s["values_a"],
+                                      s["parameter_b"], s["values_b"],
+                                      n_replications=n_rep, base_params=base))
+    return sweeps

@@ -1,0 +1,344 @@
+"""Vectorized JAX CTMC engine: thousands of AIReSim replicas per device.
+
+TPU adaptation of the paper's DES (DESIGN.md §2.2): under the paper's
+default exponential assumption the cluster is a continuous-time Markov
+chain over server *compartments* — servers are exchangeable within
+(origin x health) classes, so counts are sufficient state.  Each step
+races the exponential clock families against the deterministic timers
+(recovery / host-selection / completion) with the kernels.ops.event_race
+Pallas kernel, then applies the winning transition with masked updates.
+``lax.scan`` over events x vectorization over replicas turns a whole
+replication study into a single XLA program; parameter sweeps stack one
+level higher (sweeps run one compiled program per point with cached jit).
+
+Compartment classes: c = 2*origin + bad, i.e.
+  0: working-origin good   1: working-origin bad
+  2: spare-origin good     3: spare-origin bad
+
+Event families (K_exp = 16): random failure x4 classes, systematic
+failure x4, auto-repair completion x4, manual completion x4.
+Deterministic (K_det = 2): job completion, recovery/host-selection timer.
+
+Known approximations vs the event-driven oracle (validated statistically
+in tests/test_vectorized.py):
+  * class-proportional sampling everywhere (exact under exchangeability);
+  * misdiagnosis picks the wrong server proportionally over ALL running
+    servers (the oracle excludes the failed one: O(1/4096) difference);
+  * the initial bad-server split across pools uses its expectation.
+
+Out of scope (routed to core.simulation): retirement, bad-set
+regeneration, non-exponential distributions, failing standbys.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from .params import Params
+
+COMPUTE, OVERHEAD, STALL, DONE = 0, 1, 2, 3
+K_EXP = 16
+
+_METRICS = ("total_time", "n_failures", "n_random_failures",
+            "n_systematic_failures", "n_preemptions", "n_auto_repairs",
+            "n_manual_repairs", "n_host_selections", "n_standby_swaps",
+            "n_undiagnosed", "n_misdiagnosed", "stall_time",
+            "recovery_overhead", "lost_work", "useful_work")
+
+
+def supports(params: Params) -> bool:
+    """Can the CTMC engine simulate these params exactly?"""
+    return (params.failure_distribution.lower() == "exponential"
+            and params.repair_distribution.lower() == "exponential"
+            and params.retirement_threshold == 0
+            and params.bad_set_regeneration_period == 0
+            and params.checkpoint_interval == 0
+            and not params.standbys_can_fail)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def _initial_counts(p: Params):
+    total = p.working_pool_size + p.spare_pool_size
+    n_bad = int(round(p.systematic_failure_fraction * total))
+    bad_w = round(n_bad * p.working_pool_size / total)
+    bad_s = n_bad - bad_w
+
+    def split(n_take, pool_good, pool_bad):
+        frac_bad = pool_bad / max(pool_good + pool_bad, 1)
+        take_bad = int(round(n_take * frac_bad))
+        return n_take - take_bad, take_bad
+
+    w_good, w_bad = p.working_pool_size - bad_w, bad_w
+    run_g, run_b = split(p.job_size, w_good, w_bad)
+    w_good -= run_g
+    w_bad -= run_b
+    n_sb = min(p.warm_standbys, w_good + w_bad)
+    sb_g, sb_b = split(n_sb, w_good, w_bad)
+    w_good -= sb_g
+    w_bad -= sb_b
+    return {
+        "run": [run_g, run_b, 0, 0],
+        "sb": [sb_g, sb_b, 0, 0],
+        "fw": [w_good, w_bad, 0, 0],
+        "fs": [0, 0, p.spare_pool_size - bad_s, bad_s],
+    }
+
+
+def _initial_state(p: Params, R: int) -> Dict[str, jnp.ndarray]:
+    counts = _initial_counts(p)
+
+    def tile(vals):
+        return jnp.tile(jnp.asarray(vals, jnp.float32)[None, :], (R, 1))
+
+    state = {k: tile(v) for k, v in counts.items()}
+    state["auto"] = tile([0, 0, 0, 0])
+    state["man"] = tile([0, 0, 0, 0])
+    state["t"] = jnp.full((R,), p.host_selection_time, jnp.float32)
+    state["work_left"] = jnp.full((R,), p.job_length, jnp.float32)
+    state["timer"] = jnp.full((R,), jnp.inf, jnp.float32)
+    state["stall_start"] = jnp.zeros((R,), jnp.float32)
+    state["phase"] = jnp.full((R,), COMPUTE, jnp.int32)
+    for m in _METRICS:
+        state[m] = jnp.zeros((R,), jnp.float32)
+    return state
+
+
+def _pick_class(counts: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Categorical over 4 classes proportional to counts. (R,4),(R,)->(R,)"""
+    total = jnp.maximum(counts.sum(-1), 1e-30)
+    cdf = jnp.cumsum(counts, axis=-1) / total[:, None]
+    return jnp.minimum(jnp.sum((u[:, None] >= cdf).astype(jnp.int32), -1), 3)
+
+
+def _onehot(c: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.one_hot(c, 4, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# one transition
+# ---------------------------------------------------------------------------
+
+def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
+          impl: Optional[str]) -> Dict[str, jnp.ndarray]:
+    (r_rand, r_sys, recovery, host_sel, waiting, auto_t, man_t,
+     auto_fail, man_fail, p_auto, dp, du, ckpt, preempt_cost,
+     warm_standbys) = [pv[i] for i in range(15)]
+    R = s["t"].shape[0]
+
+    u = jax.random.uniform(key_t, (R, 8), minval=1e-12, maxval=1.0)
+    u_time, u_pick, u_diag, u_wrong, u_cls, u_esc, u_succ, u_pool = (
+        u[:, 0], u[:, 1], u[:, 2], u[:, 3], u[:, 4], u[:, 5], u[:, 6],
+        u[:, 7])
+
+    computing = s["phase"] == COMPUTE
+    in_overhead = s["phase"] == OVERHEAD
+    stalled = s["phase"] == STALL
+    active = s["phase"] != DONE
+
+    # ---- rates (R, 16) ------------------------------------------------
+    run = s["run"]
+    bad_mask = jnp.asarray([0.0, 1.0, 0.0, 1.0])
+    fail_rand = run * r_rand * computing[:, None]
+    fail_sys = run * bad_mask[None, :] * r_sys * computing[:, None]
+    auto_rate = s["auto"] / jnp.maximum(auto_t, 1e-9)
+    man_rate = s["man"] / jnp.maximum(man_t, 1e-9)
+    rates = jnp.concatenate([fail_rand, fail_sys, auto_rate, man_rate],
+                            axis=-1) * active[:, None]
+
+    residuals = jnp.stack([
+        jnp.where(computing, s["work_left"], jnp.inf),
+        jnp.where(in_overhead, s["timer"], jnp.inf),
+    ], axis=-1)
+
+    dt, ev = ops.event_race(rates, residuals, u_time, u_pick, impl=impl)
+    dt = jnp.where(active & jnp.isfinite(dt), dt, 0.0)
+
+    cls = (ev % 4).astype(jnp.int32)
+    is_fail = active & (ev < 8)
+    is_sys = active & (ev >= 4) & (ev < 8)
+    is_auto = active & (ev >= 8) & (ev < 12)
+    is_man = active & (ev >= 12) & (ev < 16)
+    is_complete = active & (ev == K_EXP)
+    is_timer = active & (ev == K_EXP + 1)
+
+    ns = dict(s)
+    ns["t"] = s["t"] + dt
+
+    # ---- progress accounting -------------------------------------------
+    # work accrues during every COMPUTE interval regardless of which event
+    # ends it (failures, repair completions, job completion); only
+    # failures roll back to the last checkpoint (extension knob).
+    progress = jnp.where(computing, dt, 0.0)
+    lost = jnp.where(is_fail & (ckpt > 0),
+                     jnp.mod(progress, jnp.maximum(ckpt, 1e-9)), 0.0)
+    banked = progress - lost
+    ns["work_left"] = s["work_left"] - banked
+    ns["useful_work"] = s["useful_work"] + banked
+    ns["lost_work"] = s["lost_work"] + lost
+
+    # ---- completion / timer ----------------------------------------------
+    # deterministic timers advance with the clock even when a concurrent
+    # (repair) event ends the step first
+    timer_dec = jnp.where(in_overhead, s["timer"] - dt, s["timer"])
+    ns["phase"] = jnp.where(is_complete, DONE, s["phase"])
+    ns["phase"] = jnp.where(is_timer, COMPUTE, ns["phase"])
+    ns["timer"] = jnp.where(is_timer, jnp.inf, timer_dec)
+    ns["total_time"] = jnp.where(is_complete, ns["t"], s["total_time"])
+
+    # ---- failure handling ---------------------------------------------------
+    f = is_fail.astype(jnp.float32)
+    ns["n_failures"] = s["n_failures"] + f
+    ns["n_systematic_failures"] = s["n_systematic_failures"] \
+        + is_sys.astype(jnp.float32)
+    ns["n_random_failures"] = s["n_random_failures"] \
+        + (is_fail & ~is_sys).astype(jnp.float32)
+
+    diagnosed = is_fail & (u_diag < dp)
+    wrong = diagnosed & (u_wrong < du)
+    ns["n_undiagnosed"] = s["n_undiagnosed"] \
+        + (is_fail & ~diagnosed).astype(jnp.float32)
+    ns["n_misdiagnosed"] = s["n_misdiagnosed"] + wrong.astype(jnp.float32)
+    removed_cls = jnp.where(wrong, _pick_class(run, u_cls), cls)
+    rm1h = _onehot(removed_cls) * diagnosed[:, None]
+    ns["run"] = ns["run"] - rm1h
+    ns["auto"] = ns["auto"] + rm1h
+
+    # replacement waterfall (only when a server was removed)
+    sb_tot = s["sb"].sum(-1)
+    fw_tot = s["fw"].sum(-1)
+    fs_tot = s["fs"].sum(-1)
+    use_sb = diagnosed & (sb_tot > 0)
+    use_fw = diagnosed & ~use_sb & (fw_tot > 0)
+    use_fs = diagnosed & ~use_sb & ~use_fw & (fs_tot > 0)
+    goes_stall = diagnosed & ~use_sb & ~use_fw & ~use_fs
+
+    sb_cls = _pick_class(s["sb"], u_cls)
+    fw_cls = _pick_class(s["fw"], u_pool)
+    fs_cls = _pick_class(s["fs"], u_pool)
+    ns["sb"] = ns["sb"] - _onehot(sb_cls) * use_sb[:, None]
+    ns["fw"] = ns["fw"] - _onehot(fw_cls) * use_fw[:, None]
+    ns["fs"] = ns["fs"] - _onehot(fs_cls) * use_fs[:, None]
+    ns["run"] = (ns["run"] + _onehot(sb_cls) * use_sb[:, None]
+                 + _onehot(fw_cls) * use_fw[:, None]
+                 + _onehot(fs_cls) * use_fs[:, None])
+    ns["n_standby_swaps"] = s["n_standby_swaps"] + use_sb.astype(jnp.float32)
+    ns["n_host_selections"] = s["n_host_selections"] \
+        + (use_fw | use_fs).astype(jnp.float32)
+    ns["n_preemptions"] = s["n_preemptions"] + use_fs.astype(jnp.float32)
+
+    fail_timer = (recovery
+                  + jnp.where(use_fw | use_fs, host_sel, 0.0)
+                  + jnp.where(use_fs, waiting + preempt_cost, 0.0))
+    resolves = is_fail & ~goes_stall
+    ns["timer"] = jnp.where(resolves, fail_timer, ns["timer"])
+    ns["phase"] = jnp.where(resolves, OVERHEAD, ns["phase"])
+    ns["phase"] = jnp.where(goes_stall, STALL, ns["phase"])
+    ns["stall_start"] = jnp.where(goes_stall, ns["t"], s["stall_start"])
+    ns["recovery_overhead"] = s["recovery_overhead"] \
+        + jnp.where(resolves, recovery, 0.0)
+
+    # ---- repair completions ----------------------------------------------
+    rep1h = _onehot(cls)
+    ns["auto"] = ns["auto"] - rep1h * is_auto[:, None]
+    ns["n_auto_repairs"] = s["n_auto_repairs"] + is_auto.astype(jnp.float32)
+    escalate = is_auto & (u_esc >= p_auto)
+    ns["man"] = ns["man"] + rep1h * escalate[:, None]
+    ns["man"] = ns["man"] - rep1h * is_man[:, None]
+    ns["n_manual_repairs"] = s["n_manual_repairs"] + is_man.astype(jnp.float32)
+
+    finishes = (is_auto & ~escalate) | is_man
+    fail_prob = jnp.where(is_man, man_fail, auto_fail)
+    healed = finishes & (u_succ >= fail_prob)
+    out_cls = jnp.where(healed, cls - (cls % 2), cls)  # bad -> good
+    out1h = _onehot(out_cls)
+
+    # returning server: stalled job > standby refill > origin pool
+    to_stalled = finishes & stalled
+    to_sb = finishes & ~to_stalled & (ns["sb"].sum(-1) < warm_standbys)
+    to_pool = finishes & ~to_stalled & ~to_sb
+    spare_origin = out_cls >= 2
+    ns["run"] = ns["run"] + out1h * to_stalled[:, None]
+    ns["sb"] = ns["sb"] + out1h * to_sb[:, None]
+    ns["fw"] = ns["fw"] + out1h * (to_pool & ~spare_origin)[:, None]
+    ns["fs"] = ns["fs"] + out1h * (to_pool & spare_origin)[:, None]
+    ns["phase"] = jnp.where(to_stalled, OVERHEAD, ns["phase"])
+    ns["timer"] = jnp.where(to_stalled, recovery, ns["timer"])
+    ns["stall_time"] = s["stall_time"] \
+        + jnp.where(to_stalled, ns["t"] - s["stall_start"], 0.0)
+    ns["recovery_overhead"] = ns["recovery_overhead"] \
+        + jnp.where(to_stalled, recovery, 0.0)
+    return ns
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _params_vector(p: Params) -> jnp.ndarray:
+    return jnp.asarray([
+        p.random_failure_rate, p.systematic_failure_rate, p.recovery_time,
+        p.host_selection_time, p.waiting_time, p.auto_repair_time,
+        p.manual_repair_time, p.auto_repair_failure_probability,
+        p.manual_repair_failure_probability, p.automated_repair_probability,
+        p.diagnosis_probability, p.diagnosis_uncertainty,
+        p.checkpoint_interval, p.preemption_cost, float(p.warm_standbys),
+    ], jnp.float32)
+
+
+def default_max_steps(p: Params, safety: float = 2.0) -> int:
+    """Expected events (failures x ~3 repair/replace hops) + head-room."""
+    lam = p.expected_failures_per_minute()
+    horizon = p.job_length * (1.0 + lam * (p.recovery_time + 2.0))
+    return max(128, int(lam * horizon * 3.2 * safety))
+
+
+@partial(jax.jit, static_argnames=("R", "max_steps", "impl", "struct_key"))
+def _run_compiled(pv: jnp.ndarray, key: jax.Array, R: int, max_steps: int,
+                  impl: Optional[str], struct_key,
+                  init_state: Dict[str, jnp.ndarray]):
+    def body(carry, key_t):
+        return _step(carry, key_t, pv, impl), None
+
+    keys = jax.random.split(key, max_steps)
+    state, _ = jax.lax.scan(body, init_state, keys)
+    state["completed"] = (state["phase"] == DONE).astype(jnp.float32)
+    state["total_time"] = jnp.where(state["phase"] == DONE,
+                                    state["total_time"], state["t"])
+    return state
+
+
+def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
+                  max_steps: Optional[int] = None,
+                  impl: Optional[str] = None) -> Dict[str, np.ndarray]:
+    """Vectorized replication study. Returns {metric: np.ndarray (R,)}.
+
+    jit-compiled once per (pool-structure, R, max_steps); parameter values
+    are traced inputs, so sweeps over rates/times/probabilities reuse the
+    compiled program.
+    """
+    if not supports(params):
+        raise ValueError(
+            "CTMC engine supports the default exponential AIReSim model "
+            "(no retirement / regeneration / non-exponential "
+            "distributions); use core.simulation.simulate instead")
+    params.validate()
+    max_steps = max_steps or default_max_steps(params)
+    struct_key = (params.job_size, params.working_pool_size,
+                  params.spare_pool_size, params.warm_standbys,
+                  round(params.systematic_failure_fraction, 6),
+                  round(params.job_length, 3),
+                  round(params.host_selection_time, 3))
+    init_state = _initial_state(params, n_replicas)
+    out = _run_compiled(_params_vector(params), jax.random.PRNGKey(seed),
+                        n_replicas, max_steps, impl, struct_key, init_state)
+    return {k: np.asarray(v) for k, v in out.items()
+            if k in _METRICS + ("completed",)}

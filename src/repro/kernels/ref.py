@@ -1,0 +1,206 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the semantics of record: each kernel's tests sweep shapes/dtypes
+and assert allclose against these functions.  They are also the execution
+path on non-TPU backends (the dry-run compiles on CPU), so they are written
+to be memory-bounded at production shapes:
+
+  * attention_ref supports a scan-over-query-blocks mode (online softmax in
+    fp32) so 32k-context lowering never materializes an (S, S) score matrix
+    bigger than (block_q, S);
+  * selective_scan_ref carries only the (B, d_inner, N) state through a
+    lax.scan over time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal/full, optional kv-length mask)
+# ---------------------------------------------------------------------------
+
+def _attn_block(q, k, v, *, causal: bool, q_pos, k_pos,
+                kv_len: Optional[jax.Array]) -> jax.Array:
+    """Full-materialization attention for one query block.
+
+    q: (B, Sq, Hkv, G, d)  k/v: (B, Sk, Hkv, d)
+    returns (B, Sq, Hkv, G, d); math in fp32.
+    """
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = None
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]          # (Sq, Sk)
+    if kv_len is not None:
+        len_mask = k_pos[None, :] < kv_len                # (1, Sk)
+        mask = len_mask if mask is None else (mask & len_mask)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_offset: int | jax.Array = 0,
+                  kv_len: Optional[jax.Array] = None,
+                  q_block: Optional[int] = None) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, Hq, d); k/v: (B, Sk, Hkv, d); Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (decode with a cache).
+    ``kv_len``: if given, keys at positions >= kv_len are masked out.
+    ``q_block``: if set and Sq > q_block, runs the online-softmax block
+    scan (memory O(block * Sk) instead of O(Sq * Sk)).
+    """
+    B, Sq, Hq, d = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, d)
+    k_pos = jnp.arange(Sk)
+
+    if q_block is None or Sq <= q_block or Sq % q_block != 0:
+        # direct path (also the fallback for non-divisible lengths, e.g.
+        # whisper's 1500-frame encoder)
+        q_pos = q_offset + jnp.arange(Sq)
+        out = _attn_block(qg, k, v, causal=causal, q_pos=q_pos, k_pos=k_pos,
+                          kv_len=kv_len)
+        return out.reshape(B, Sq, Hq, d).astype(q.dtype)
+
+    n_blocks = Sq // q_block
+    qb = qg.reshape(B, n_blocks, q_block, Hkv, G, d)
+
+    def body(_, args):
+        qi, q_pos = args
+        out = _attn_block(qi, k, v, causal=causal, q_pos=q_pos, k_pos=k_pos,
+                          kv_len=kv_len)
+        return None, out
+
+    pos = (q_offset + jnp.arange(Sq)).reshape(n_blocks, q_block)
+    _, out = jax.lax.scan(body, None,
+                          (jnp.moveaxis(qb, 1, 0), pos))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bmat: jax.Array, Cmat: jax.Array,
+                       h0: Optional[jax.Array] = None,
+                       chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-1 selective state-space scan.
+
+    x, dt: (B, S, di);  A: (di, N);  Bmat, Cmat: (B, S, N).
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) outer B_t
+    y_t = (h_t * C_t).sum(N)
+    Returns (y (B, S, di), h_final (B, di, N)); math in fp32.
+
+    Two-level structure: an outer scan over ``chunk``-sized pieces whose
+    body is jax.checkpoint'ed, so the backward pass saves only chunk
+    boundary states (S/chunk x (B, di, N)) instead of one (B, di, N)
+    residual per time step — this mirrors the Pallas kernel's chunking
+    and keeps 100k+-step training scans memory-sane.
+    """
+    Bsz, S, di = x.shape
+    N = A.shape[-1]
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+
+    def step(h, args):
+        x_t, dt_t, B_t, C_t = args          # (B,di) (B,di) (B,N) (B,N)
+        dtf = dt_t.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * Af[None])        # (B,di,N)
+        drive = (dtf * x_t.astype(jnp.float32))[..., None] \
+            * B_t.astype(jnp.float32)[:, None, :]
+        h = decay * h + drive
+        y_t = jnp.sum(h * C_t.astype(jnp.float32)[:, None, :], axis=-1)
+        return h, y_t
+
+    def scan_chunk(h, args):
+        xc, dtc, Bc, Cc = args              # (c, B, ...) time-major
+        return jax.lax.scan(step, h, (xc, dtc, Bc, Cc))
+
+    if S % chunk or S <= chunk:
+        h_final, ys = scan_chunk(
+            h0.astype(jnp.float32),
+            (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+             jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+        return y, h_final
+
+    n_chunks = S // chunk
+
+    def outer(h, args):
+        return jax.checkpoint(scan_chunk)(h, args)
+
+    def to_chunks(a):
+        # (B, S, F) -> (n_chunks, chunk, B, F)
+        t = jnp.moveaxis(a, 1, 0)
+        return t.reshape(n_chunks, chunk, t.shape[1], t.shape[2])
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(Bmat), to_chunks(Cmat))
+    h_final, ys = jax.lax.scan(outer, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys.reshape(S, Bsz, di), 0, 1).astype(x.dtype)
+    return y, h_final
+
+
+def selective_scan_step_ref(x_t: jax.Array, dt_t: jax.Array, A: jax.Array,
+                            B_t: jax.Array, C_t: jax.Array, h: jax.Array,
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step: x_t/dt_t (B, di); B_t/C_t (B, N); h (B, di, N)."""
+    Af = A.astype(jnp.float32)
+    decay = jnp.exp(dt_t.astype(jnp.float32)[..., None] * Af[None])
+    drive = (dt_t.astype(jnp.float32) * x_t.astype(jnp.float32))[..., None] \
+        * B_t.astype(jnp.float32)[:, None, :]
+    h_new = decay * h + drive
+    y = jnp.sum(h_new * C_t.astype(jnp.float32)[:, None, :], axis=-1)
+    return y.astype(x_t.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# DES next-event race (vectorized CTMC inner step)
+# ---------------------------------------------------------------------------
+
+def event_race_ref(rates: jax.Array, residuals: jax.Array,
+                   u_time: jax.Array, u_pick: jax.Array,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Race K_exp exponential clocks against K_det deterministic timers.
+
+    rates:     (R, K_exp) propensities (0 = clock off)
+    residuals: (R, K_det) remaining deterministic times (+inf = off)
+    u_time, u_pick: (R,) uniforms in (0, 1)
+
+    Returns (dt (R,), event (R,) int32) where event < K_exp indexes the
+    winning exponential family and event >= K_exp indexes K_exp + argmin
+    residual.  The minimum of the exponential clocks is Exp(sum rates) and
+    the winner is categorical(rates) — sampled by inverse-CDF on u_pick.
+    """
+    total = rates.sum(-1)                                   # (R,)
+    safe_total = jnp.maximum(total, 1e-30)
+    t_exp = -jnp.log(u_time) / safe_total
+    t_exp = jnp.where(total > 0, t_exp, jnp.inf)
+
+    cdf = jnp.cumsum(rates, axis=-1) / safe_total[:, None]
+    pick_exp = jnp.sum(u_pick[:, None] >= cdf, axis=-1)     # (R,)
+    pick_exp = jnp.minimum(pick_exp, rates.shape[-1] - 1).astype(jnp.int32)
+
+    t_det = residuals.min(-1)
+    pick_det = residuals.argmin(-1).astype(jnp.int32) + rates.shape[-1]
+
+    dt = jnp.minimum(t_exp, t_det)
+    event = jnp.where(t_exp <= t_det, pick_exp, pick_det)
+    return dt, event

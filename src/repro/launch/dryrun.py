@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, without allocating a single model byte.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the optimized HLO
+  * the three roofline terms + bottleneck + useful-compute ratio
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh single,multi --out results/dryrun.json
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count at first initialization.  Do not set this flag globally:
+smoke tests and benchmarks expect 1 device.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.parallel import ParallelConfig, build_step
+from repro.roofline.analysis import analyze
+from repro.train.optimizer import OptimizerConfig
+
+
+def opt_config_for(cfg) -> OptimizerConfig:
+    """fp32 Adam moments by default; bf16 for the >=100B monsters
+    (16 GB/chip HBM budget — recorded in the fits-HBM column)."""
+    big = cfg.param_count() > 100e9
+    return OptimizerConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             pcfg: Optional[ParallelConfig] = None,
+             verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, reason = applicable(cfg, shape)
+    record: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        record["status"] = "SKIP"
+        record["reason"] = reason
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP "
+                  f"({reason.split(';')[0]})")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    bundle = build_model(cfg)
+    t0 = time.time()
+    try:
+        with mesh:
+            step = build_step(bundle, mesh, shape,
+                              opt_cfg=opt_config_for(cfg), pcfg=pcfg)
+            lowered = step.fn.lower(*step.in_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as exc:  # a failure here is a bug in the system
+        record["status"] = "FAIL"
+        record["error"] = f"{type(exc).__name__}: {exc}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL "
+                  f"{record['error']}")
+        return record
+
+    # memory_analysis reports the per-partition module, i.e. per device;
+    # donated state aliases outputs, so args+temp is the resident footprint
+    resident = float(mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+    roof = analyze(arch, shape_name, mesh_name, n_chips, cfg, shape,
+                   hlo, cost, resident)
+    record.update({
+        "status": "OK",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "per_device_resident_gb": round(resident / 1e9, 3),
+        "cost_flops": float(cost.get("flops", 0.0)),
+        "cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        "roofline": roof.to_dict(),
+    })
+    if verbose:
+        r = record["roofline"]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"compile={t_compile:.0f}s resident/dev="
+              f"{record['per_device_resident_gb']:.2f}GB "
+              f"bottleneck={r['bottleneck']} "
+              f"terms(c/m/x)={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+              f"{r['collective_s']:.4f}s frac={r['roofline_fraction']:.2f}")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="comma list or 'all'")
+    ap.add_argument("--shape", default="all", help="comma list or 'all'")
+    ap.add_argument("--mesh", default="single,multi",
+                    help="single | multi | single,multi")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--append", action="store_true",
+                    help="merge with existing --out file")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = [m.strip() for m in args.mesh.split(",")]
+
+    records: List[Dict] = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records
+            if r.get("status") == "OK"}
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                multi = mesh_kind == "multi"
+                key = (arch, shape_name, "2x16x16" if multi else "16x16")
+                if key in done:
+                    continue
+                rec = run_cell(arch, shape_name, multi)
+                records = [r for r in records
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                records.append(rec)
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+
+    n_ok = sum(1 for r in records if r["status"] == "OK")
+    n_skip = sum(1 for r in records if r["status"] == "SKIP")
+    n_fail = sum(1 for r in records if r["status"] == "FAIL")
+    print(f"[dryrun] done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL "
+          f"-> {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

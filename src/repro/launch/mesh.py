@@ -1,0 +1,53 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — the dry-run must set XLA_FLAGS
+before the first jax initialization.
+
+Production target: TPU v5e pods, 256 chips each.
+  * single-pod: (16, 16) -> ("data", "model")
+  * multi-pod:  (2, 16, 16) -> ("pod", "data", "model"); the "pod" axis
+    carries FSDP/DP traffic over DCI, "model" stays intra-pod ICI.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests use small ones, e.g. (2, 4))."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: Optional[int] = None) -> Mesh:
+    """Best-effort mesh over whatever devices exist (examples/smoke runs)."""
+    n = len(jax.devices())
+    mp = model_parallel or 1
+    assert n % mp == 0, (n, mp)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def elastic_mesh(n_failed_replicas: int = 0, *, multi_pod: bool = False) -> Mesh:
+    """Re-mesh after losing data-parallel replicas (elastic scaling).
+
+    Drops ``n_failed_replicas`` rows from the data axis and rebuilds — the
+    training loop re-lowers on the reduced mesh and continues at a smaller
+    global batch (fault_tolerance.py drives this).
+    """
+    base_data = 16
+    data = base_data - n_failed_replicas
+    if data < 1:
+        raise ValueError("no data-parallel replicas left")
+    if multi_pod:
+        return jax.make_mesh((2, data, 16), ("pod", "data", "model"))
+    return jax.make_mesh((data, 16), ("data", "model"))

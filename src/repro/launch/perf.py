@@ -1,0 +1,127 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb runner: named variants over the dry-run cells.
+
+Each variant re-lowers a cell with a configuration change (sharding knob,
+remat policy, CE chunk, MoE buffer layout, optimizer dtype) and reports
+the three roofline terms next to the baseline, appending to
+results/perf.json.  The 'kernelized' pseudo-variant applies the analytic
+Pallas-kernel substitution (roofline/kernel_adjust.py) on top of a
+measured variant.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --arch falcon-mamba-7b \
+      --shape train_4k --variant baseline,remat_dots,kernelized
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import opt_config_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.parallel import ParallelConfig, build_step
+from repro.roofline.analysis import analyze
+from repro.roofline.kernel_adjust import kernelized_roofline
+
+#: variant name -> dict of overrides:
+#:   pcfg: ParallelConfig field overrides
+#:   model: ModelConfig field overrides (remat policy, capacity factor...)
+#:   opt_state_dtype: Adam moment dtype
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "no_sp": {"pcfg": {"shard_sequence": False}},
+    "remat_dots": {"model": {"remat_policy": "dots"}},
+    "no_remat": {"model": {"remat_policy": "full"}},
+    "moe_dp_buffer": {"pcfg": {"moe_buffer_mode": "dp"}},
+    "moe_ep_buffer": {"pcfg": {"moe_buffer_mode": "ep"}},
+    "moe_token_local": {"pcfg": {"moe_buffer_mode": "ep_local"}},
+    "moe_token_local_cap1": {"pcfg": {"moe_buffer_mode": "ep_local"},
+                             "model": {"capacity_factor": 1.0}},
+    "moe_none_buffer": {"pcfg": {"moe_buffer_mode": "none"}},
+    "moe_shard_map": {"pcfg": {"moe_buffer_mode": "shard_map"}},
+    "moe_shard_map_cap1": {"pcfg": {"moe_buffer_mode": "shard_map"},
+                           "model": {"capacity_factor": 1.0}},
+    "no_vocab_shard": {"pcfg": {"shard_embed_vocab": False}},
+    "opt_bf16": {"opt_state_dtype": "bfloat16"},
+    "capacity_1_0": {"model": {"capacity_factor": 1.0}},
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                multi_pod: bool = False) -> Dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    spec = VARIANTS.get(variant, {})
+    if spec.get("model"):
+        cfg = cfg.replace(**spec["model"])
+    pcfg = ParallelConfig(**spec.get("pcfg", {}))
+    opt_cfg = opt_config_for(cfg)
+    if spec.get("opt_state_dtype"):
+        opt_cfg = dataclasses.replace(opt_cfg,
+                                      state_dtype=spec["opt_state_dtype"])
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = build_model(cfg)
+    t0 = time.time()
+    with mesh:
+        step = build_step(bundle, mesh, shape, opt_cfg=opt_cfg, pcfg=pcfg)
+        compiled = step.fn.lower(*step.in_specs).compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    resident = float(mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+    roof = analyze(arch, shape_name, "2x16x16" if multi_pod else "16x16",
+                   mesh.devices.size, cfg, shape, hlo, cost, resident)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "compile_s": round(time.time() - t0, 1),
+        "per_device_resident_gb": round(resident / 1e9, 3),
+        "roofline": roof.to_dict(),
+    }
+    rec["kernelized"] = kernelized_roofline(roof, cfg, shape)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/perf.json")
+    args = ap.parse_args()
+
+    records = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+
+    for variant in args.variant.split(","):
+        rec = run_variant(args.arch, args.shape, variant, args.multi_pod)
+        r = rec["roofline"]
+        k = rec["kernelized"]
+        print(f"[perf] {args.arch} x {args.shape} [{variant}]: "
+              f"c/m/x = {r['compute_s']:.3f}/{r['memory_s']:.3f}/"
+              f"{r['collective_s']:.3f}s frac={r['roofline_fraction']:.3f} "
+              f"resident={rec['per_device_resident_gb']:.1f}GB | kernelized "
+              f"m={k['memory_s']:.3f}s frac={k['roofline_fraction']:.3f}")
+        records = [x for x in records if not (
+            x["arch"] == args.arch and x["shape"] == args.shape
+            and x["variant"] == variant and x["mesh"] == rec["mesh"])]
+        records.append(rec)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

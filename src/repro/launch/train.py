@@ -1,0 +1,75 @@
+"""Training launcher CLI: arch + shape -> fault-tolerant loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --smoke --steps 50 --inject-failures
+
+Full-size runs use the production mesh on real hardware; --smoke runs the
+reduced same-family config on the host devices (this container).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.core.params import Params as ClusterParams
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.train.loop import TrainLoopConfig, train
+from repro.train.optimizer import OptimizerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on host devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="default: Young/Daly cadence from --cluster-* rates")
+    ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None, help="write run summary JSON")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        mesh = make_host_mesh()
+        shape = ShapeSpec("cli", args.seq_len or 64, args.global_batch or 4,
+                          "train")
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        shape = ShapeSpec("cli", args.seq_len or 4096,
+                          args.global_batch or 256, "train")
+
+    bundle = build_model(cfg)
+    out = train(
+        bundle, mesh, shape,
+        TrainLoopConfig(total_steps=args.steps,
+                        log_every=max(args.steps // 10, 1),
+                        checkpoint_dir=args.ckpt_dir,
+                        checkpoint_every=args.ckpt_every,
+                        inject_failures=args.inject_failures,
+                        cluster=ClusterParams()),
+        OptimizerConfig(learning_rate=args.lr,
+                        warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps),
+    )
+    for h in out["history"]:
+        print(f"step {h['step']:5d}  loss {h['loss']:8.4f}  "
+              f"{h['step_time_s'] * 1e3:8.1f} ms")
+    print(f"done: {out['steps']} steps, final loss {out['final_loss']:.4f}, "
+          f"recoveries {out['recovery']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: composable JAX definitions of the assigned architectures."""
+
+from .config import ModelConfig
+from .model_zoo import (ModelBundle, build_model, decode_step, forward_train,
+                        init_params, loss_fn, prefill)
+
+__all__ = ["ModelBundle", "ModelConfig", "build_model", "decode_step",
+           "forward_train", "init_params", "loss_fn", "prefill"]

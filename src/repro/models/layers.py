@@ -1,0 +1,203 @@
+"""Core transformer layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+Functional style: ``init_*`` builds a param dict, ``apply``-style functions
+are pure.  Weights keep explicit head axes — wq (D, Hq, hd), wo (Hq, hd, D)
+— so TP sharding rules can target the head dimension by name.
+
+Attention routes through kernels.ops.flash_attention (Pallas on TPU, jnp
+reference elsewhere); KV caches are written in-place with
+dynamic_update_slice so decode steps lower to a single cache update.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig
+from .module import dense_init, embed_init, key_for, ones_init, zeros_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, d) with even d; positions: (S,) or scalar-broadcast."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (S, half)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (self / cross, with optional KV cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig, path: str,
+                   dtype) -> Params:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p: Params = {
+        "wq": dense_init(key_for(key, path + "/wq"), (D, Hq, hd), dtype),
+        "wk": dense_init(key_for(key, path + "/wk"), (D, Hkv, hd), dtype),
+        "wv": dense_init(key_for(key, path + "/wv"), (D, Hkv, hd), dtype),
+        "wo": dense_init(key_for(key, path + "/wo"), (Hq, hd, D), dtype,
+                         scale=1.0 / (Hq * hd) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq, hd), dtype)
+        p["bk"] = jnp.zeros((Hkv, hd), dtype)
+        p["bv"] = jnp.zeros((Hkv, hd), dtype)
+    return p
+
+
+def attention(p: Params, cfg: ModelConfig, x: jax.Array, *,
+              kv_src: Optional[jax.Array] = None, cross: bool = False,
+              cache: Optional[Params] = None,
+              pos=0, causal: bool = True, use_rope: bool = True,
+              impl: Optional[str] = None,
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """Self- or cross-attention.
+
+    x: (B, S, D).  cross=True: keys/values come from ``kv_src``
+    (encoder/image states) when given, else from the cross KV cache.
+    cache: {"k","v"}: (B, S_max, Hkv, hd); ``pos`` is the absolute position
+    of x[0] (0 for train/prefill, traced scalar for decode).
+    Returns (out (B, S, D), updated cache or None).
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+
+    if cross:
+        # ---- cross-attention: static KV from encoder/image states -------
+        if kv_src is not None:  # train / prefill: compute KV
+            k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+            if "bk" in p:
+                k, v = k + p["bk"], v + p["bv"]
+            if cache is not None:
+                k = k.astype(cache["k"].dtype)
+                v = v.astype(cache["v"].dtype)
+        else:  # decode: reuse cached KV
+            assert cache is not None, "cross-attention decode needs a cache"
+            k, v = cache["k"], cache["v"]
+        new_cache = {"k": k, "v": v} if cache is not None else None
+        out = ops.flash_attention(q, k, v, causal=False, impl=impl)
+        return (jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]),
+                new_cache)
+
+    # ---- self-attention ---------------------------------------------------
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+
+    if use_rope:
+        positions = pos + jnp.arange(S)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # write k/v into the cache at ``pos``
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if S == 1:
+            # decode: attend over the cache up to pos+1
+            out = ops.flash_attention(q, ck, cv, causal=False,
+                                      kv_len=pos + 1, impl=impl)
+        else:
+            # prefill: attend over freshly computed keys only
+            out = ops.flash_attention(q, k, v, causal=causal, q_offset=0,
+                                      impl=impl)
+    else:
+        out = ops.flash_attention(q, k, v, causal=causal, impl=impl)
+
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"]), new_cache
+
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, s_max: int,
+                    dtype=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, width: int, path: str,
+             dtype) -> Params:
+    D = cfg.d_model
+    if cfg.act == "gelu":
+        return {
+            "wi": dense_init(key_for(key, path + "/wi"), (D, width), dtype),
+            "bi": jnp.zeros((width,), dtype),
+            "wo_mlp": dense_init(key_for(key, path + "/wo"), (width, D), dtype),
+            "bo": jnp.zeros((D,), dtype),
+        }
+    return {
+        "wg": dense_init(key_for(key, path + "/wg"), (D, width), dtype),
+        "wu": dense_init(key_for(key, path + "/wu"), (D, width), dtype),
+        "wd": dense_init(key_for(key, path + "/wd"), (width, D), dtype),
+    }
+
+
+def mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "wi" in p:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"])
+        return jnp.einsum("bsf,fd->bsd", h, p["wo_mlp"]) + p["bo"]
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", g * u, p["wd"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key: jax.Array, cfg: ModelConfig, dtype) -> jax.Array:
+    return embed_init(key_for(key, "embed"), (cfg.vocab_size, cfg.d_model),
+                      dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def init_head(key: jax.Array, cfg: ModelConfig, dtype) -> jax.Array:
+    return dense_init(key_for(key, "head"), (cfg.d_model, cfg.vocab_size),
+                      dtype)

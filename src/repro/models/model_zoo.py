@@ -1,0 +1,227 @@
+"""Model construction: config -> (init, loss, forward, prefill, decode).
+
+Handles all assigned families:
+  * decoder-only LMs (dense / MoE / SSM / hybrid) — tokens in, logits out;
+  * encoder-decoder (whisper backbone) — the audio conv frontend is a STUB:
+    ``frames`` arrive as precomputed (B, encoder_seq, d_model) embeddings;
+  * VLM (llama-3.2-vision backbone) — patch frontend is a STUB:
+    ``image_embeds`` arrive as (B, n_image_tokens, d_image) and are
+    projected into d_model for the cross-attention layers.
+
+The cross-entropy loss is computed in fp32 with a chunked scan over the
+sequence axis so the fp32 logit tensor never fully materializes (vocab
+sizes here reach 163k).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import embed, init_embedding, init_head, init_rmsnorm, rmsnorm
+from .module import dense_init, key_for
+from .transformer import apply_stack, init_cache, init_stack, stack_cache_spec
+
+Params = Dict[str, Any]
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+CE_CHUNK = 512
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def encoder_config(cfg: ModelConfig) -> ModelConfig:
+    """Whisper encoder: uniform bidirectional attention + dense MLP."""
+    return cfg.replace(n_layers=cfg.encoder_layers, encoder_layers=0,
+                       cross_attn_period=0, ssm_state=0, attn_period=1,
+                       n_experts=0, top_k=0)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    p: Params = {
+        "embed": init_embedding(key, cfg, dt),
+        "stack": init_stack(key, cfg, dt),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = init_head(key, cfg, dt)
+    if cfg.is_encdec:
+        enc_cfg = encoder_config(cfg)
+        p["encoder"] = {
+            "stack": init_stack(key_for(key, "enc"), enc_cfg, dt,
+                                prefix="enc_stack"),
+            "final_norm": init_rmsnorm(cfg.d_model, dt),
+        }
+    if cfg.cross_attn_period > 0 and cfg.d_image not in (0, cfg.d_model):
+        p["img_proj"] = dense_init(key_for(key, "img_proj"),
+                                   (cfg.d_image, cfg.d_model), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cross-attention source
+# ---------------------------------------------------------------------------
+
+def _cross_source(params: Params, cfg: ModelConfig,
+                  batch: Dict[str, jax.Array],
+                  impl: Optional[str]) -> Optional[jax.Array]:
+    if cfg.is_encdec:
+        frames = batch["frames"]                 # (B, enc_seq, D) stub
+        enc_cfg = encoder_config(cfg)
+        h, _, _ = apply_stack(params["encoder"]["stack"], enc_cfg, frames,
+                              causal=False, impl=impl)
+        return rmsnorm(params["encoder"]["final_norm"], h, cfg.norm_eps)
+    if cfg.cross_attn_period > 0:
+        img = batch["image_embeds"]              # (B, n_img, d_image) stub
+        if "img_proj" in params:
+            img = jnp.einsum("bnd,de->bne", img, params["img_proj"])
+        return img.astype(_dtype(cfg))
+    return None
+
+
+def _logits(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, cfg: ModelConfig,
+                  batch: Dict[str, jax.Array],
+                  impl: Optional[str] = None,
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = embed(params["embed"], batch["tokens"])
+    cross = _cross_source(params, cfg, batch, impl)
+    x, _, aux = apply_stack(params["stack"], cfg, x, cross_src=cross,
+                            causal=True, impl=impl)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), aux
+
+
+def _chunked_ce(logits_fn: Callable[[jax.Array], jax.Array], x: jax.Array,
+                labels: jax.Array, chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """sum CE and token count, scanning S in chunks of ``chunk``."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fall back to single chunk for odd lengths
+    n = S // chunk
+    xs = (x.reshape(B, n, chunk, D).swapaxes(0, 1),
+          labels.reshape(B, n, chunk).swapaxes(0, 1))
+
+    @jax.checkpoint
+    def body(carry, args):
+        xc, yc = args                                   # (B, c, D), (B, c)
+        logits = logits_fn(xc).astype(jnp.float32)      # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        mask = (yc >= 0).astype(jnp.float32)
+        ce_sum, n_tok = carry
+        return (ce_sum + jnp.sum((lse - lab) * mask),
+                n_tok + jnp.sum(mask)), None
+
+    (ce_sum, n_tok), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return ce_sum, n_tok
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            impl: Optional[str] = None,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = embed(params["embed"], batch["tokens"])
+    cross = _cross_source(params, cfg, batch, impl)
+    x, _, aux = apply_stack(params["stack"], cfg, x, cross_src=cross,
+                            causal=True, impl=impl)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    ce_sum, n_tok = _chunked_ce(
+        lambda xc: jnp.einsum("bsd,dv->bsv", xc, head), x, batch["labels"],
+        CE_CHUNK)
+    loss = ce_sum / jnp.maximum(n_tok, 1.0)
+    metrics = {"ce_loss": loss, **aux}
+    if "moe_load_balance" in aux:
+        loss = (loss + MOE_LB_WEIGHT * aux["moe_load_balance"]
+                + MOE_Z_WEIGHT * aux["moe_z_loss"])
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache: Params, impl: Optional[str] = None,
+            ) -> Tuple[jax.Array, Params]:
+    """Process the prompt, writing KV/SSM caches. Returns last-pos logits."""
+    x = embed(params["embed"], batch["tokens"])
+    cross = _cross_source(params, cfg, batch, impl)
+    x, cache, _ = apply_stack(params["stack"], cfg, x, cross_src=cross,
+                              caches=cache, pos=0, causal=True, impl=impl)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    return _logits(params, cfg, x), cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache: Params, pos: jax.Array,
+                impl: Optional[str] = None) -> Tuple[jax.Array, Params]:
+    """One decode step. token: (B, 1) int32; pos: scalar int32."""
+    x = embed(params["embed"], token)
+    x, cache, _ = apply_stack(params["stack"], cfg, x, cross_src=None,
+                              caches=cache, pos=pos, causal=True, impl=impl)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), cache
+
+
+# ---------------------------------------------------------------------------
+# bundle
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    forward: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill: Callable[..., Tuple[jax.Array, Params]]
+    decode: Callable[..., Tuple[jax.Array, Params]]
+    make_cache: Callable[[int, int], Params]
+    cache_spec: Callable[[int, int], Params]
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    cross_len = (cfg.encoder_seq if cfg.is_encdec
+                 else cfg.n_image_tokens if cfg.cross_attn_period else 0)
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(lambda key, c=cfg: init_params(c, key)),
+        loss=functools.partial(lambda p, b, c=cfg, **kw: loss_fn(p, c, b, **kw)),
+        forward=functools.partial(
+            lambda p, b, c=cfg, **kw: forward_train(p, c, b, **kw)),
+        prefill=functools.partial(
+            lambda p, b, cache, c=cfg, **kw: prefill(p, c, b, cache, **kw)),
+        decode=functools.partial(
+            lambda p, t, cache, pos, c=cfg, **kw: decode_step(
+                p, c, t, cache, pos, **kw)),
+        make_cache=lambda batch, s_max, c=cfg: init_cache(
+            c, batch, s_max, cross_len),
+        cache_spec=lambda batch, s_max, c=cfg: stack_cache_spec(
+            c, batch, s_max, cross_len),
+    )

@@ -1,0 +1,82 @@
+"""Minimal functional parameter-tree module system.
+
+flax is not installed; models are pure functions over nested dicts of
+jnp arrays.  Initializers split PRNG keys deterministically by path so that
+parameter initialization is reproducible and shard-friendly (each init is
+an independent jit-able computation).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def key_for(root: jax.Array, path: str) -> jax.Array:
+    """Deterministic key derived from a string path (stable across runs)."""
+    h = np.uint32(2166136261)
+    for ch in path.encode():
+        h = np.uint32((int(h) ^ ch) * 16777619 & 0xFFFFFFFF)
+    return jax.random.fold_in(root, int(h))
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: float | None = None) -> jax.Array:
+    """Truncated-normal fan-in init (LLM standard)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# tree utilities
+# ---------------------------------------------------------------------------
+
+def tree_paths(params: Params, prefix: str = "") -> Iterator[Tuple[str, Any]]:
+    """Yield (path, leaf) with '/'-joined dict keys."""
+    for k in sorted(params.keys()):
+        v = params[k]
+        p = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            yield from tree_paths(v, p)
+        else:
+            yield p, v
+
+
+def tree_size_bytes(params: Params) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for _, leaf in tree_paths(params))
+
+
+def tree_param_count(params: Params) -> int:
+    return sum(int(leaf.size) for _, leaf in tree_paths(params))
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], params: Params,
+                       prefix: str = "") -> Params:
+    out: Params = {}
+    for k, v in params.items():
+        p = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out[k] = tree_map_with_path(fn, v, p)
+        else:
+            out[k] = fn(p, v)
+    return out

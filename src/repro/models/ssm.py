@@ -1,0 +1,125 @@
+"""Mamba-1 selective state-space block.
+
+Structure (falcon-mamba / jamba SSM layers):
+
+    x, z = in_proj(u)                   # (B, S, di) each, di = expand*D
+    x    = silu(causal_conv1d(x))       # depthwise, width ssm_conv
+    dt, B, C = x_proj(x)                # dt via low-rank + softplus
+    y    = selective_scan(x, dt, A, B, C) + D * x
+    out  = out_proj(y * silu(z))
+
+The scan routes through kernels.ops.selective_scan (Pallas chunked scan on
+TPU, lax.scan reference elsewhere).  Decode keeps a (conv window, ssm
+state) cache and costs O(1) per token — this is why SSM/hybrid archs run
+the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig
+from .module import dense_init, key_for
+
+Params = Dict[str, Any]
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, path: str, dtype) -> Params:
+    D, di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    W = cfg.ssm_conv
+    # S4D-real initialization for A; dt bias set for softplus(dt) ~ U[1e-3, 1e-1]
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": dense_init(key_for(key, path + "/in"), (D, 2 * di), dtype),
+        "conv_w": dense_init(key_for(key, path + "/conv"), (W, di), dtype,
+                             scale=1.0 / W ** 0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(key_for(key, path + "/xp"), (di, R + 2 * N), dtype),
+        "dt_w": dense_init(key_for(key, path + "/dtw"), (R, di), dtype),
+        "dt_b": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(key_for(key, path + "/out"), (di, D), dtype,
+                               scale=1.0 / di ** 0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init_window: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x (B,S,di), w (W,di)."""
+    W = w.shape[0]
+    if init_window is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_window.astype(x.dtype)                   # (B, W-1, di)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+W-1, di)
+    out = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(W):
+        out = out + xp[:, i:i + S, :] * w[i]
+    return out + b
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int,
+                     dtype=jnp.float32) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, cfg.d_inner, cfg.ssm_state), dtype),
+    }
+
+
+def mamba(p: Params, cfg: ModelConfig, u: jax.Array, *,
+          cache: Optional[Params] = None, impl: Optional[str] = None,
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    """u: (B, S, D) -> (out (B, S, D), updated cache or None)."""
+    B, S, D = u.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)                        # (B, S, di)
+
+    A = -jnp.exp(p["A_log"])                                # (di, N)
+
+    if cache is not None and S == 1:
+        # ---- decode step: conv from cached window, O(1) scan update ----
+        window = jnp.concatenate([cache["conv"], x.astype(cache["conv"].dtype)],
+                                 axis=1)                    # (B, W, di)
+        xc = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+        xc = jax.nn.silu(xc).astype(u.dtype)                # (B, di)
+        dbc = jnp.einsum("bd,de->be", xc, p["x_proj"])
+        dt_low, Bm, Cm = jnp.split(dbc, [R, R + N], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("br,rd->bd", dt_low, p["dt_w"])
+            + p["dt_b"].astype(dt_low.dtype))
+        y, h_new = ops.selective_scan_step(xc, dt, A, Bm, Cm, cache["ssm"])
+        y = y + xc * p["D"].astype(y.dtype)
+        new_cache = {"conv": window[:, 1:, :], "ssm": h_new}
+        out = y[:, None, :]
+    else:
+        # ---- train / prefill ----
+        init_window = cache["conv"] if cache is not None else None
+        xc = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"],
+                                      init_window))
+        dbc = jnp.einsum("bsd,de->bse", xc, p["x_proj"])
+        dt_low, Bm, Cm = jnp.split(dbc, [R, R + N], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,rd->bsd", dt_low, p["dt_w"])
+            + p["dt_b"].astype(dt_low.dtype))
+        h0 = cache["ssm"] if cache is not None else None
+        y, h_final = ops.selective_scan(xc, dt, A, Bm, Cm, h0, impl=impl)
+        y = y + xc * p["D"].astype(y.dtype)
+        new_cache = None
+        if cache is not None:
+            W = cfg.ssm_conv
+            new_cache = {"conv": x[:, -(W - 1):, :].astype(cache["conv"].dtype),
+                         "ssm": h_final}
+        out = y
+
+    out = out * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", out, p["out_proj"]), new_cache

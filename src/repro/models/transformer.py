@@ -1,0 +1,206 @@
+"""Model assembly: layer -> super-block -> scanned stack -> LM.
+
+The layer stack is expressed as ``n_superblocks`` repetitions of a fixed
+per-superblock pattern (see ModelConfig.superblock_pattern), with the
+superblock parameters stacked on a leading axis and the stack applied via
+``lax.scan`` (+ jax.checkpoint remat).  This keeps HLO size O(superblock)
+for 100-layer models — essential for CPU-hosted 512-device dry-run
+compiles — and makes activation-checkpoint policy a config knob.
+
+Three entry points per model:
+  * forward_train(params, tokens, extra)          -> logits
+  * prefill(params, tokens, extra, cache, pos=0)  -> logits, cache
+  * decode_step(params, token, cache, pos)        -> logits, cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention, attn_cache_spec, embed, init_attention,
+                     init_embedding, init_head, init_mlp, init_rmsnorm, mlp,
+                     rmsnorm)
+from .moe import init_moe, moe
+from .module import key_for
+from .ssm import init_mamba, mamba, mamba_cache_spec
+
+Params = Dict[str, Any]
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key: jax.Array, cfg: ModelConfig, spec: Dict[str, Any],
+               path: str, dtype) -> Params:
+    p: Params = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if spec["kind"] == "attn":
+        p["attn"] = init_attention(key, cfg, path + "/attn", dtype)
+    else:
+        p["ssm"] = init_mamba(key, cfg, path + "/ssm", dtype)
+    if spec["cross_attn"]:
+        p["norm_x"] = init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = init_attention(key, cfg, path + "/cross", dtype)
+    if spec["moe"]:
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        p["moe"] = init_moe(key, cfg, path + "/moe", dtype)
+    elif spec["mlp"]:
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        p["mlp"] = init_mlp(key, cfg, cfg.d_ff, path + "/mlp", dtype)
+    return p
+
+
+def apply_layer(p: Params, cfg: ModelConfig, spec: Dict[str, Any],
+                x: jax.Array, *, cross_src: Optional[jax.Array],
+                cache: Optional[Params], pos, causal: bool, impl,
+                ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
+    new_cache: Params = {}
+    aux: Dict[str, jax.Array] = {}
+
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec["kind"] == "attn":
+        self_cache = cache.get("self") if cache else None
+        h, nc = attention(p["attn"], cfg, h, cache=self_cache, pos=pos,
+                          causal=causal, impl=impl)
+        if nc is not None:
+            new_cache["self"] = nc
+    else:
+        ssm_cache = cache.get("ssm") if cache else None
+        h, nc = mamba(p["ssm"], cfg, h, cache=ssm_cache, impl=impl)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    x = x + h
+
+    if spec["cross_attn"]:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        cross_cache = cache.get("cross") if cache else None
+        h, nc = attention(p["cross"], cfg, h, kv_src=cross_src, cross=True,
+                          cache=cross_cache, causal=False, impl=impl)
+        if nc is not None:
+            new_cache["cross"] = nc
+        x = x + h
+
+    if "moe" in p:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h, aux = moe(p["moe"], cfg, h)
+        x = x + h
+    elif "mlp" in p:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h = mlp(p["mlp"], cfg, h)
+        x = x + h
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def layer_cache_spec(cfg: ModelConfig, spec: Dict[str, Any], batch: int,
+                     s_max: int, cross_len: int) -> Params:
+    out: Params = {}
+    if spec["kind"] == "attn":
+        out["self"] = attn_cache_spec(cfg, batch, s_max)
+    else:
+        out["ssm"] = mamba_cache_spec(cfg, batch)
+    if spec["cross_attn"]:
+        out["cross"] = attn_cache_spec(cfg, batch, cross_len)
+    return out
+
+
+def stack_cache_spec(cfg: ModelConfig, batch: int, s_max: int,
+                     cross_len: int = 0) -> Params:
+    """ShapeDtypeStructs for the full decode cache (stacked superblocks)."""
+    pattern = cfg.superblock_pattern()
+    n_sb = cfg.n_superblocks
+
+    def _stack(sds: jax.ShapeDtypeStruct) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((n_sb,) + sds.shape, sds.dtype)
+
+    per_layer = {
+        f"layer{j}": jax.tree.map(_stack,
+                                  layer_cache_spec(cfg, spec, batch, s_max,
+                                                   cross_len))
+        for j, spec in enumerate(pattern)
+    }
+    return per_layer
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               cross_len: int = 0) -> Params:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        stack_cache_spec(cfg, batch, s_max, cross_len))
+
+
+# ---------------------------------------------------------------------------
+# stacked superblocks
+# ---------------------------------------------------------------------------
+
+def init_stack(key: jax.Array, cfg: ModelConfig, dtype,
+               prefix: str = "stack") -> Params:
+    pattern = cfg.superblock_pattern()
+
+    def init_one(sb_key: jax.Array) -> Params:
+        return {
+            f"layer{j}": init_layer(sb_key, cfg, spec,
+                                    f"{prefix}/layer{j}", dtype)
+            for j, spec in enumerate(pattern)
+        }
+
+    sb_keys = jax.random.split(key_for(key, prefix), cfg.n_superblocks)
+    return jax.vmap(init_one)(sb_keys)
+
+
+def apply_stack(stacked: Params, cfg: ModelConfig, x: jax.Array, *,
+                cross_src: Optional[jax.Array] = None,
+                caches: Optional[Params] = None, pos=0,
+                causal: bool = True, impl: Optional[str] = None,
+                ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
+    pattern = cfg.superblock_pattern()
+    has_cache = caches is not None
+
+    from repro.parallel.context import constrain_activations
+
+    def body(carry, xs):
+        x = carry
+        sb_params = xs[0]
+        sb_cache = xs[1] if has_cache else None
+        new_cache: Params = {}
+        aux_acc: Dict[str, jax.Array] = {}
+        for j, spec in enumerate(pattern):
+            lc = sb_cache.get(f"layer{j}") if sb_cache else None
+            x, nc, aux = apply_layer(
+                sb_params[f"layer{j}"], cfg, spec, x, cross_src=cross_src,
+                cache=lc, pos=pos, causal=causal, impl=impl)
+            if nc is not None:
+                new_cache[f"layer{j}"] = nc
+            for k, v in aux.items():
+                aux_acc[k] = aux_acc.get(k, 0.0) + v
+        # boundary-activation sharding (SP) — no-op outside a step builder
+        x = constrain_activations(x)
+        outs = (new_cache, aux_acc) if has_cache else (aux_acc,)
+        return x, outs
+
+    policy = REMAT_POLICIES.get(cfg.remat_policy)
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (stacked, caches) if has_cache else (stacked,)
+    x, outs = jax.lax.scan(body, x, xs)
+    if has_cache:
+        new_caches, aux_stack = outs
+    else:
+        new_caches = None
+        (aux_stack,) = outs
+    aux = {k: jnp.sum(v) / cfg.n_layers for k, v in aux_stack.items()}
+    return x, new_caches, aux

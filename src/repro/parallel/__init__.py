@@ -1,0 +1,12 @@
+"""Distribution layer: sharding rules, sharded step builders."""
+
+from .sharding import (ParallelConfig, batch_shardings, cache_shardings,
+                       mesh_axes, param_spec, params_shardings)
+from .steps import (BuiltStep, build_step, input_specs, make_decode_step,
+                    make_prefill_step, make_train_step, param_specs,
+                    state_specs)
+
+__all__ = ["BuiltStep", "ParallelConfig", "batch_shardings",
+           "cache_shardings", "build_step", "input_specs", "make_decode_step",
+           "make_prefill_step", "make_train_step", "mesh_axes", "param_spec",
+           "param_specs", "params_shardings", "state_specs"]

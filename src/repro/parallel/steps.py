@@ -1,0 +1,214 @@
+"""Distributed step builders: train_step / prefill_step / decode_step.
+
+Each builder returns (jitted_fn, in_shardings, input ShapeDtypeStructs) so
+callers can either execute (examples, smoke runs) or ``.lower().compile()``
+against placeholder inputs (the multi-pod dry-run).
+
+GSPMD does the collective planning: parameters carry FSDP x TP shardings
+(sharding.py), batches are data-sharded, boundary activations are
+sequence-sharded inside the layer scan, and gradients/optimizer updates
+inherit parameter shardings (Adam state mirrors them exactly).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.model_zoo import ModelBundle
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state)
+
+from .context import activation_sharding_scope
+from .sharding import (ParallelConfig, batch_shardings, cache_shardings,
+                       mesh_axes, activation_spec, params_shardings)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs for every model input)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Placeholder inputs for an (arch, shape) cell — no allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), bf16)
+        elif cfg.cross_attn_period > 0:
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_image), bf16)
+    return specs
+
+
+def state_specs(bundle: ModelBundle, opt_cfg: OptimizerConfig) -> Params:
+    """ShapeDtypeStructs of the train state (params + Adam moments)."""
+    def make(key):
+        params = bundle.init(key)
+        return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+    return jax.eval_shape(make, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_specs(bundle: ModelBundle) -> Params:
+    return jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BuiltStep:
+    fn: Callable                    # the jit-wrapped step
+    in_specs: Tuple[Any, ...]       # ShapeDtypeStructs for .lower()
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+
+
+def make_train_step(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec,
+                    opt_cfg: OptimizerConfig = OptimizerConfig(),
+                    pcfg: ParallelConfig = ParallelConfig(),
+                    impl: Optional[str] = None) -> BuiltStep:
+    cfg = bundle.cfg
+    act_sharding = NamedSharding(
+        mesh, activation_spec(mesh, shape.global_batch, shape.seq_len, pcfg))
+    fsdp, tp = mesh_axes(mesh)
+    moe_axes = (mesh, fsdp, tp, pcfg.moe_buffer_mode)
+
+    def train_step(state: Params, batch: Params):
+        def loss_of(p):
+            with activation_sharding_scope(
+                    act_sharding if pcfg.shard_sequence else None,
+                    moe_axes=moe_axes):
+                return bundle.loss(p, batch, impl=impl)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(state["params"])
+        new_params, new_opt, stats = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    st_specs = state_specs(bundle, opt_cfg)
+    p_sh = params_shardings(st_specs["params"], mesh, pcfg)
+    state_sh = {"params": p_sh,
+                "opt": {"m": p_sh, "v": p_sh,
+                        "step": NamedSharding(mesh, P())}}
+    b_specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(b_specs, mesh, pcfg)
+
+    fn = jax.jit(train_step,
+                 in_shardings=(state_sh, b_sh),
+                 out_shardings=(state_sh, None),
+                 donate_argnums=(0,))
+    return BuiltStep(fn=fn, in_specs=(st_specs, b_specs),
+                     in_shardings=(state_sh, b_sh), donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def _cross_len(cfg: ModelConfig) -> int:
+    return (cfg.encoder_seq if cfg.is_encdec
+            else cfg.n_image_tokens if cfg.cross_attn_period else 0)
+
+
+def make_prefill_step(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec,
+                      pcfg: ParallelConfig = ParallelConfig(),
+                      impl: Optional[str] = None) -> BuiltStep:
+    cfg = bundle.cfg
+    act_sharding = NamedSharding(
+        mesh, activation_spec(mesh, shape.global_batch, shape.seq_len, pcfg))
+    fsdp, tp = mesh_axes(mesh)
+    moe_axes = (mesh, fsdp, tp, pcfg.moe_buffer_mode)
+
+    def prefill_step(params, batch, cache):
+        with activation_sharding_scope(
+                act_sharding if pcfg.shard_sequence else None,
+                moe_axes=moe_axes):
+            return bundle.prefill(params, batch, cache, impl=impl)
+
+    p_specs = param_specs(bundle)
+    p_sh = params_shardings(p_specs, mesh, pcfg)
+    b_specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(b_specs, mesh, pcfg)
+    c_specs = bundle.cache_spec(shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(c_specs, mesh, pcfg)
+
+    fn = jax.jit(prefill_step,
+                 in_shardings=(p_sh, b_sh, c_sh),
+                 out_shardings=(None, c_sh),
+                 donate_argnums=(2,))
+    return BuiltStep(fn=fn, in_specs=(p_specs, b_specs, c_specs),
+                     in_shardings=(p_sh, b_sh, c_sh), donate_argnums=(2,))
+
+
+def make_decode_step(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec,
+                     pcfg: Optional[ParallelConfig] = None,
+                     impl: Optional[str] = None) -> BuiltStep:
+    cfg = bundle.cfg
+    if pcfg is None:
+        # long-context single-request decode: shard the KV cache sequence
+        # axis over the data axes (batch cannot be sharded at B == 1)
+        pcfg = ParallelConfig(
+            cache_seq_axis=("data",) if shape.global_batch == 1 else None)
+
+    def decode_fn(params, token, cache, pos):
+        logits, new_cache = bundle.decode(params, token, cache, pos,
+                                          impl=impl)
+        return logits, new_cache
+
+    p_specs = param_specs(bundle)
+    p_sh = params_shardings(p_specs, mesh, pcfg)
+    t_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    t_sh = batch_shardings(t_spec, mesh, pcfg)
+    c_specs = bundle.cache_spec(shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(c_specs, mesh, pcfg)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(p_sh, t_sh, c_sh, pos_sh),
+                 out_shardings=(None, c_sh),
+                 donate_argnums=(2,))
+    return BuiltStep(fn=fn,
+                     in_specs=(p_specs, t_spec, c_specs, pos_spec),
+                     in_shardings=(p_sh, t_sh, c_sh, pos_sh),
+                     donate_argnums=(2,))
+
+
+def build_step(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec,
+               opt_cfg: OptimizerConfig = OptimizerConfig(),
+               pcfg: Optional[ParallelConfig] = None,
+               impl: Optional[str] = None) -> BuiltStep:
+    """Dispatch on the shape kind (train / prefill / decode)."""
+    if shape.kind == "train":
+        return make_train_step(bundle, mesh, shape, opt_cfg,
+                               pcfg or ParallelConfig(), impl)
+    if shape.kind == "prefill":
+        return make_prefill_step(bundle, mesh, shape,
+                                 pcfg or ParallelConfig(), impl)
+    return make_decode_step(bundle, mesh, shape, pcfg, impl)

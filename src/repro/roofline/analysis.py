@@ -1,0 +1,456 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link (3 links/chip; we count the per-link figure, i.e. the
+bottleneck link of a ring collective).
+
+Sources:
+  * ``compiled.cost_analysis()`` for HLO FLOPs / bytes.  XLA:CPU's cost
+    model does NOT multiply while-loop bodies by their trip counts, so we
+    also parse the optimized HLO: collective/FLOP-bearing ops inside a
+    while body whose condition bounds the induction variable by a constant
+    are scaled by that constant (scan-over-superblocks, CE chunks, ...).
+  * collective bytes from the optimized HLO text — result-shape bytes of
+    every all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute, x2 for ring all-reduce, scaled by while trip
+    counts.
+  * MODEL_FLOPS analytically (6*N_active*tokens for training), giving the
+    useful-compute ratio that catches remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e constants ------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+HBM_PER_CHIP = 16e9          # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,128,512]{2,1,0}' -> byte size (0 for tuples/tokens)."""
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def add(self, kind: str, nbytes: int, repeats: int = 1) -> None:
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0) \
+            + nbytes * repeats
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + repeats
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is not None and stripped:
+            comps[current].append(stripped)
+    return comps
+
+
+def _result_shapes(line: str) -> List[str]:
+    """Shape strings of an instruction's result (tuple-aware)."""
+    m = re.match(r"\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(.*?)\s*[\w\-]+\(", line)
+    if not m:
+        return []
+    return re.findall(r"[a-z0-9]+\[[\d,]*\]", m.group(1))
+
+
+def _shape_table(comps: Dict[str, List[str]]) -> Dict[str, List[str]]:
+    """instruction name -> result shape strings (across all computations)."""
+    table: Dict[str, List[str]] = {}
+    for lines in comps.values():
+        for line in lines:
+            nm = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=", line)
+            if nm:
+                table[nm.group(1)] = _result_shapes(line)
+    return table
+
+
+def _while_trip_counts(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """while body computation name -> static trip count (best effort).
+
+    jax scans lower to while loops whose condition compares the induction
+    variable with a constant; we extract that constant from the condition
+    computation.
+    """
+    trip: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line or line.startswith("while("):
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                if not (mb and mc):
+                    continue
+                body, cond = mb.group(1), mc.group(1)
+                count = None
+                for cl in comps.get(cond, []):
+                    m = re.search(r"constant\((\d+)\)", cl)
+                    if m:
+                        c = int(m.group(1))
+                        if count is None or c > count:
+                            count = c
+                if count:
+                    trip[body] = count
+    return trip
+
+
+def _callers_of(comps: Dict[str, List[str]]) -> Dict[str, List[str]]:
+    """computation -> computations it invokes via calls/fusion/while."""
+    out: Dict[str, List[str]] = {name: [] for name in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            for m in re.finditer(
+                    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)", line):
+                callee = m.group(1)
+                if callee in comps:
+                    out[name].append(callee)
+    return out
+
+
+def _multipliers(comps: Dict[str, List[str]],
+                 trip: Dict[str, int]) -> Dict[str, int]:
+    """Effective execution multiplier of each computation (nested whiles)."""
+    callers = _callers_of(comps)
+    mult: Dict[str, int] = {}
+    entry = None
+    for name in comps:
+        if "entry" in name.lower() or name.startswith("main"):
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    def visit(name: str, factor: int, seen) -> None:
+        if name in seen:
+            return
+        seen = seen | {name}
+        mult[name] = max(mult.get(name, 0), factor)
+        for callee in callers.get(name, []):
+            f = factor * trip.get(callee, 1)
+            visit(callee, f, seen)
+
+    if entry is not None:
+        visit(entry, 1, frozenset())
+    # unreachable comps default to 1x
+    for name in comps:
+        mult.setdefault(name, 1)
+    return mult
+
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*[^=]*?\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum per-device collective link bytes, scaling by while trip counts.
+
+    Convention (bytes crossing the bottleneck link per device, ring
+    algorithms over a group of size g):
+      all-gather:         result_bytes * (g-1)/g
+      reduce-scatter:     result_bytes * (g-1)        (operand = result*g)
+      all-reduce:         2 * result_bytes * (g-1)/g
+      all-to-all:         result_bytes * (g-1)/g
+      collective-permute: result_bytes
+    """
+    comps = _split_computations(hlo_text)
+    trips = _while_trip_counts(comps)
+    mults = _multipliers(comps, trips)
+    stats = CollectiveStats()
+    for name, lines in comps.items():
+        factor = mults.get(name, 1)
+        for line in lines:
+            m = _COLLECTIVE_RE.search(line)
+            if not m:
+                continue
+            kind = m.group(1)
+            nbytes = sum(_shape_bytes(s) for s in _result_shapes(line))
+            g = 2
+            gm = _GROUP_RE.search(line)
+            if gm:
+                g = max(int(gm.group(2)), 1)
+            if kind == "all-gather":
+                eff = nbytes * (g - 1) / g
+            elif kind == "reduce-scatter":
+                eff = nbytes * (g - 1)
+            elif kind == "all-reduce":
+                eff = 2 * nbytes * (g - 1) / g
+            elif kind == "all-to-all":
+                eff = nbytes * (g - 1) / g
+            else:  # collective-permute
+                eff = nbytes
+            stats.add(kind, int(eff), factor)
+    return stats
+
+
+_DOT_RE = re.compile(r"=\s*[^=]*?\sdot\(([^)]*)\)")
+_LHS_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]+)\}")
+
+
+def hlo_flops_and_bytes(hlo_text: str,
+                        cost_analysis: Optional[Dict[str, float]] = None,
+                        ) -> Tuple[float, float]:
+    """Per-device (FLOPs, HBM bytes), while-loop trip counts applied.
+
+    XLA:CPU cost analysis reports while bodies once; we parse every dot op,
+    look up operand shapes, compute 2*|out|*k FLOPs, and scale by the
+    enclosing while trip counts.  HBM bytes are cost_analysis['bytes
+    accessed'] rescaled by the same loop factor (flops_scaled /
+    flops_unscaled) — loop bodies dominate traffic in scanned models.
+    """
+    comps = _split_computations(hlo_text)
+    trips = _while_trip_counts(comps)
+    mults = _multipliers(comps, trips)
+    shapes = _shape_table(comps)
+
+    flops_scaled = 0.0
+    flops_raw = 0.0
+    for name, lines in comps.items():
+        factor = mults.get(name, 1)
+        for line in lines:
+            m = _DOT_RE.search(line)
+            if not m:
+                continue
+            out_shapes = _result_shapes(line)
+            if not out_shapes:
+                continue
+            dt = re.match(r"([a-z0-9]+)\[", out_shapes[0]).group(1)
+            out_elems = _shape_bytes(out_shapes[0]) / max(
+                _DTYPE_BYTES.get(dt, 4), 1)
+            operands = re.findall(r"%([\w.\-]+)", m.group(1))
+            k = 1.0
+            if operands:
+                lhs_shapes = shapes.get(operands[0], [])
+                if lhs_shapes:
+                    dims = [int(x) for x in re.match(
+                        r"[a-z0-9]+\[([\d,]*)\]", lhs_shapes[0]
+                    ).group(1).split(",") if x]
+                    cm = _LHS_DIMS_RE.search(line)
+                    if cm and dims:
+                        for ci in cm.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(dims):
+                                k *= dims[ci]
+            f = 2.0 * out_elems * k
+            flops_raw += f
+            flops_scaled += f * factor
+
+    # ---- HBM bytes at fusion boundaries -------------------------------
+    # Count result + operand bytes of every top-level instruction (entry +
+    # while bodies), scaled by trip counts.  Computations referenced via
+    # calls=/to_apply= are fusion internals — their traffic happens in
+    # registers/VMEM, not HBM, so they are excluded (matching the
+    # semantics of XLA's "bytes accessed").
+    fusion_bodies = set()
+    for lines in comps.values():
+        for line in lines:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", line):
+                fusion_bodies.add(m.group(1))
+
+    bytes_accessed = 0.0
+    for name, lines in comps.items():
+        if name in fusion_bodies:
+            continue
+        factor = mults.get(name, 1)
+        for line in lines:
+            op = re.match(r"\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*[^=]*?"
+                          r"\s([\w\-]+)\(", line)
+            if not op:
+                continue
+            opname = op.group(1)
+            if opname in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast", "while"):
+                continue
+            paren = line[line.index("(") + 1:] if "(" in line else ""
+            operand_bytes = []
+            for om in re.finditer(r"%([\w.\-]+)", paren):
+                for s in shapes.get(om.group(1), []):
+                    operand_bytes.append(_shape_bytes(s))
+            result = sum(_shape_bytes(s) for s in _result_shapes(line))
+            if opname == "dynamic-slice":
+                # in-place view: only the slice moves
+                traffic = 2 * result
+            elif opname == "dynamic-update-slice" or "dynamic-update-slice" in line:
+                # in-place: read update + write slice, not the buffer
+                upd = min(operand_bytes) if operand_bytes else 0
+                traffic = 2 * upd
+            else:
+                traffic = result + sum(operand_bytes)
+            bytes_accessed += traffic * factor
+
+    if cost_analysis:
+        flops_scaled = max(flops_scaled,
+                           float(cost_analysis.get("flops", 0.0)))
+        bytes_accessed = max(bytes_accessed,
+                             float(cost_analysis.get("bytes accessed", 0.0)))
+    return flops_scaled, bytes_accessed
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs / bytes (the denominator of the useful-compute ratio)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell (6*N*D train, 2*N*D inference)."""
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        base = 6.0 * n_active * tokens
+        attn = 0.0
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.layer_kind(i) == "attn")
+        # causal attention: fwd 2*2*S^2/2*H*hd per example; train = 3x fwd
+        attn = 3.0 * 2.0 * B * S * S * cfg.n_heads * cfg.head_dim * n_attn
+        return base + attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.layer_kind(i) == "attn")
+        attn = 2.0 * B * S * S * cfg.n_heads * cfg.head_dim * n_attn
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per request
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.layer_kind(i) == "attn")
+    attn = 4.0 * B * S * cfg.n_heads * cfg.head_dim * n_attn
+    return 2.0 * n_active * B + attn
+
+
+def model_bytes(cfg, shape) -> float:
+    """Analytic minimum HBM traffic (params/caches read once)."""
+    p_bytes = cfg.active_param_count() * 2.0   # bf16
+    if shape.kind == "train":
+        return 3.0 * cfg.param_count() * 2.0   # params+grads+opt touched
+    if shape.kind == "prefill":
+        return p_bytes
+    # decode: read params + full KV cache
+    B, S = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.layer_kind(i) == "attn")
+    kv = 2.0 * B * S * cfg.n_kv_heads * cfg.head_dim * 2.0 * n_attn
+    return p_bytes + kv
+
+
+# ---------------------------------------------------------------------------
+# the three-term roofline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    """All hlo_* / coll_* fields are PER-DEVICE per step; model_flops_ is
+    the cluster-wide analytic total."""
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops_: float
+    per_device_hbm: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    fits_hbm: bool = True
+    collectives: Dict[str, int] = field(default_factory=dict)
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / LINK_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo = self.hlo_flops * self.n_chips
+        self.useful_ratio = (self.model_flops_ / total_hlo
+                             if total_hlo else 0.0)
+        self.fits_hbm = self.per_device_hbm <= HBM_PER_CHIP
+        return self
+
+    @property
+    def step_time_bound_s(self) -> float:
+        """Lower bound on step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful (model) compute time / achievable step-time bound."""
+        useful_s = self.model_flops_ / (self.n_chips * PEAK_FLOPS)
+        bound = self.step_time_bound_s
+        return useful_s / bound if bound > 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["step_time_bound_s"] = self.step_time_bound_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, n_chips: int,
+            cfg, shape, hlo_text: str, cost: Optional[Dict[str, float]],
+            per_device_bytes: float) -> Roofline:
+    coll = collective_bytes(hlo_text)
+    flops, hbytes = hlo_flops_and_bytes(hlo_text, cost)  # per-device
+    mf = model_flops(cfg, shape)                         # cluster total
+    # floors: HLO cannot beat the analytic model math / min traffic
+    flops = max(flops, mf / n_chips)
+    hbytes = max(hbytes, model_bytes(cfg, shape) / n_chips)
+    r = Roofline(arch=arch, shape=shape_name, mesh=mesh_name,
+                 n_chips=n_chips, hlo_flops=flops, hlo_bytes=hbytes,
+                 coll_bytes=float(coll.total_bytes), model_flops_=mf,
+                 per_device_hbm=per_device_bytes,
+                 collectives=dict(coll.bytes_by_kind))
+    return r.finalize()

@@ -1,0 +1,299 @@
+"""Behaviour + invariant tests for the AIReSim cluster simulation."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (MINUTES_PER_DAY, ClusterSimulation, Params, aggregate,
+                        expected_failures, expected_total_time, simulate,
+                        simulate_one)
+from repro.core.server import ServerState
+
+DAY = MINUTES_PER_DAY
+
+
+def tiny(**kw) -> Params:
+    base = dict(job_size=32, working_pool_size=40, spare_pool_size=8,
+                warm_standbys=4, job_length=2 * DAY, seed=123)
+    base.update(kw)
+    return Params(**base)
+
+
+# ---------------------------------------------------------------------------
+# exactness checks
+# ---------------------------------------------------------------------------
+
+def test_zero_failure_rate_gives_exact_job_length():
+    p = tiny(random_failure_rate=0.0, systematic_failure_rate=0.0)
+    r = simulate_one(p)
+    assert r.n_failures == 0
+    # total = host_selection (t=0) + job_length exactly
+    assert r.total_time == pytest.approx(p.host_selection_time + p.job_length)
+    assert r.useful_work == pytest.approx(p.job_length)
+    assert r.run_durations == [pytest.approx(p.job_length)]
+
+
+def test_zero_systematic_fraction_has_no_systematic_failures():
+    p = tiny(systematic_failure_fraction=0.0,
+             random_failure_rate=0.5 / DAY, job_length=4 * DAY)
+    r = simulate_one(p)
+    assert r.n_systematic_failures == 0
+    assert r.n_failures == r.n_random_failures
+    assert r.n_failures > 0
+
+
+def test_deterministic_recovery_accounting():
+    """Every failure charges exactly recovery_time when standbys suffice."""
+    p = tiny(random_failure_rate=0.2 / DAY, systematic_failure_fraction=0.0,
+             warm_standbys=32, working_pool_size=100, job_length=2 * DAY,
+             recovery_time=17.0)
+    r = simulate_one(p)
+    assert r.recovery_overhead == pytest.approx(17.0 * r.n_failures)
+    # total = t0 host selection + work + recovery (+ possible host selections)
+    assert r.total_time >= p.host_selection_time + p.job_length \
+        + r.recovery_overhead - 1e-6
+
+
+def test_total_time_decomposition():
+    p = tiny(random_failure_rate=1.0 / DAY, job_length=DAY)
+    r = simulate_one(p)
+    overhead = r.total_time - r.useful_work
+    assert overhead >= r.recovery_overhead + r.stall_time - 1e-6
+    assert r.useful_work == pytest.approx(p.job_length)
+
+
+# ---------------------------------------------------------------------------
+# failure counting / classification
+# ---------------------------------------------------------------------------
+
+def test_failure_split_sums():
+    p = tiny(random_failure_rate=0.5 / DAY, job_length=4 * DAY)
+    r = simulate_one(p)
+    assert r.n_failures == r.n_random_failures + r.n_systematic_failures
+
+
+def test_expected_failures_close_to_analytical():
+    # disable repair-driven healing so the rate stays constant:
+    # repairs always fail (bad stays bad)
+    p = Params(job_size=512, working_pool_size=560, spare_pool_size=50,
+               warm_standbys=16, job_length=8 * DAY,
+               auto_repair_failure_probability=1.0,
+               manual_repair_failure_probability=1.0,
+               random_failure_rate=0.05 / DAY, seed=7)
+    results = simulate(p, 8)
+    mean_failures = np.mean([r.n_failures for r in results])
+    # analytical uses work-time only; failures also accrue slightly less
+    # because clocks pause during recovery — allow 15% band
+    expected = expected_failures(p)
+    assert abs(mean_failures - expected) / expected < 0.15
+
+
+def test_higher_failure_rate_more_failures_paired_seeds():
+    lo = tiny(random_failure_rate=0.1 / DAY, job_length=4 * DAY)
+    hi = tiny(random_failure_rate=1.0 / DAY, job_length=4 * DAY)
+    r_lo = np.mean([r.n_failures for r in simulate(lo, 6)])
+    r_hi = np.mean([r.n_failures for r in simulate(hi, 6)])
+    assert r_hi > r_lo
+
+
+# ---------------------------------------------------------------------------
+# replacement waterfall
+# ---------------------------------------------------------------------------
+
+def test_standby_swap_has_no_host_selection():
+    p = tiny(warm_standbys=30, working_pool_size=70,
+             random_failure_rate=0.3 / DAY, job_length=2 * DAY,
+             # keep servers in repair long so standbys are consumed
+             auto_repair_time=50 * DAY, manual_repair_time=50 * DAY)
+    r = simulate_one(p)
+    if r.n_failures <= 30:
+        assert r.n_host_selections == 0
+        assert r.n_standby_swaps == r.n_failures - r.n_undiagnosed
+
+
+def test_preemption_only_after_pools_exhausted():
+    # working pool has zero headroom beyond job + standbys
+    p = tiny(job_size=32, warm_standbys=2, working_pool_size=34,
+             spare_pool_size=10, random_failure_rate=2.0 / DAY,
+             job_length=2 * DAY,
+             auto_repair_time=50 * DAY, manual_repair_time=50 * DAY)
+    r = simulate_one(p)
+    if r.n_failures > 2:
+        assert r.n_preemptions > 0
+
+
+def test_stall_when_everything_exhausted():
+    p = tiny(job_size=16, warm_standbys=0, working_pool_size=16,
+             spare_pool_size=1, random_failure_rate=4.0 / DAY,
+             job_length=2 * DAY, diagnosis_probability=1.0,
+             auto_repair_time=2 * DAY, manual_repair_time=10 * DAY)
+    r = simulate_one(p)
+    assert r.stall_time > 0.0
+    assert not r.timed_out
+
+
+def test_no_preemptions_with_big_working_pool():
+    p = tiny(working_pool_size=500, random_failure_rate=0.5 / DAY,
+             job_length=2 * DAY)
+    r = simulate_one(p)
+    assert r.n_preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# repair pipeline
+# ---------------------------------------------------------------------------
+
+def test_all_failures_go_through_auto_repair_when_diagnosed():
+    p = tiny(diagnosis_probability=1.0, random_failure_rate=0.5 / DAY,
+             job_length=4 * DAY, auto_repair_time=1.0, manual_repair_time=2.0)
+    r = simulate_one(p)
+    # every diagnosed failure triggers an auto attempt; all complete quickly
+    assert r.n_auto_repairs == r.n_failures
+
+
+def test_manual_repairs_follow_escalation_probability():
+    p = tiny(diagnosis_probability=1.0, automated_repair_probability=0.5,
+             random_failure_rate=1.0 / DAY, job_length=8 * DAY,
+             auto_repair_time=1.0, manual_repair_time=1.0, seed=3)
+    results = simulate(p, 6)
+    autos = sum(r.n_auto_repairs for r in results)
+    manuals = sum(r.n_manual_repairs for r in results)
+    assert autos > 50
+    ratio = manuals / autos
+    assert 0.35 < ratio < 0.65  # ~0.5 escalation
+
+
+def test_repair_heals_bad_servers():
+    """With perfect repair, systematic failures decay over the run."""
+    p = Params(job_size=256, working_pool_size=300, spare_pool_size=32,
+               warm_standbys=16, job_length=32 * DAY,
+               systematic_failure_fraction=0.3,
+               systematic_failure_rate=10 * 0.01 / DAY,
+               auto_repair_failure_probability=0.0,
+               manual_repair_failure_probability=0.0,
+               diagnosis_probability=1.0, auto_repair_time=10.0,
+               manual_repair_time=60.0, seed=11)
+    r = simulate_one(p)
+    sim = ClusterSimulation(p, seed=11)
+    result = sim.run()
+    n_bad_left = sum(1 for s in sim.fleet.servers if s.is_bad)
+    n_bad_start = int(round(0.3 * len(sim.fleet.servers)))
+    # bad servers in the job get healed; only unexercised ones stay bad
+    assert n_bad_left < n_bad_start
+
+
+def test_retirement_removes_repeat_offenders():
+    p = tiny(retirement_threshold=2, retirement_window=100 * DAY,
+             systematic_failure_fraction=0.5,
+             systematic_failure_rate=20 * 0.01 / DAY,
+             random_failure_rate=0.01 / DAY,
+             auto_repair_failure_probability=1.0,   # repairs never fix
+             manual_repair_failure_probability=1.0,
+             diagnosis_probability=1.0,
+             auto_repair_time=5.0, manual_repair_time=10.0,
+             job_length=16 * DAY, working_pool_size=64, spare_pool_size=32)
+    r = simulate_one(p)
+    assert r.n_retired > 0
+
+
+# ---------------------------------------------------------------------------
+# diagnosis
+# ---------------------------------------------------------------------------
+
+def test_undiagnosed_failures_counted():
+    p = tiny(diagnosis_probability=0.5, random_failure_rate=1.0 / DAY,
+             job_length=4 * DAY, seed=5)
+    results = simulate(p, 6)
+    undiag = sum(r.n_undiagnosed for r in results)
+    total = sum(r.n_failures for r in results)
+    assert total > 40
+    assert 0.3 < undiag / total < 0.7
+
+
+def test_misdiagnosis_sends_wrong_server():
+    p = tiny(diagnosis_probability=1.0, diagnosis_uncertainty=0.5,
+             random_failure_rate=1.0 / DAY, job_length=4 * DAY, seed=9)
+    results = simulate(p, 6)
+    mis = sum(r.n_misdiagnosed for r in results)
+    total = sum(r.n_failures for r in results)
+    assert mis > 0
+    assert mis / total < 0.7
+
+
+# ---------------------------------------------------------------------------
+# conservation invariant
+# ---------------------------------------------------------------------------
+
+def test_server_conservation_after_run():
+    p = tiny(random_failure_rate=1.0 / DAY, job_length=2 * DAY)
+    sim = ClusterSimulation(p)
+    sim.run()
+    counts = sim.pools.conservation_counts()
+    assert sum(counts.values()) == p.working_pool_size + p.spare_pool_size
+    # after release_all, nothing should be RUNNING or STANDBY
+    assert counts.get(ServerState.RUNNING.value, 0) == 0
+    assert counts.get(ServerState.STANDBY.value, 0) == 0
+
+
+def test_checkpoint_interval_loses_work():
+    p = tiny(checkpoint_interval=60.0, random_failure_rate=2.0 / DAY,
+             job_length=2 * DAY)
+    r = simulate_one(p)
+    if r.n_failures > 0:
+        assert r.lost_work > 0.0
+        assert r.useful_work == pytest.approx(p.job_length)
+
+
+# ---------------------------------------------------------------------------
+# distributions / regeneration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["lognormal", "weibull"])
+def test_alternative_distributions_run(dist):
+    p = tiny(failure_distribution=dist, random_failure_rate=0.5 / DAY,
+             job_length=DAY)
+    r = simulate_one(p)
+    assert r.total_time > 0
+    assert not r.timed_out
+
+
+def test_bad_set_regeneration_runs():
+    p = tiny(bad_set_regeneration_period=0.5 * DAY,
+             random_failure_rate=0.5 / DAY, job_length=2 * DAY)
+    r = simulate_one(p)
+    assert not r.timed_out
+
+
+def test_seeds_are_reproducible():
+    p = tiny(random_failure_rate=1.0 / DAY)
+    a = simulate_one(p, seed=42)
+    b = simulate_one(p, seed=42)
+    assert a.total_time == b.total_time
+    assert a.n_failures == b.n_failures
+
+
+def test_different_seeds_differ():
+    p = tiny(random_failure_rate=1.0 / DAY)
+    a = simulate_one(p, seed=1)
+    b = simulate_one(p, seed=2)
+    assert (a.total_time, a.n_failures) != (b.total_time, b.n_failures)
+
+
+def test_validate_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        Params(working_pool_size=10, job_size=100).validate()
+    with pytest.raises(ValueError):
+        Params(systematic_failure_fraction=1.5).validate()
+    with pytest.raises(ValueError):
+        Params(recovery_time=-1).validate()
+
+
+def test_aggregate_statistics():
+    p = tiny(random_failure_rate=0.5 / DAY)
+    results = simulate(p, 5)
+    agg = aggregate(results)
+    st = agg["total_time"]
+    assert st.minimum <= st.median <= st.maximum
+    assert st.percentiles[25] <= st.percentiles[75]
+    assert st.std >= 0

@@ -1,0 +1,191 @@
+"""Unit tests for the DES engine (SimPy-equivalent substrate)."""
+
+import pytest
+
+from repro.core.engine import Environment, Interrupt
+
+
+def test_timeout_ordering():
+    env = Environment()
+    log = []
+
+    def proc(delay, tag):
+        yield env.timeout(delay)
+        log.append((env.now, tag))
+
+    env.process(proc(5, "b"))
+    env.process(proc(1, "a"))
+    env.process(proc(9, "c"))
+    env.run()
+    assert log == [(1.0, "a"), (5.0, "b"), (9.0, "c")]
+
+
+def test_same_time_fifo():
+    env = Environment()
+    log = []
+
+    def proc(tag):
+        yield env.timeout(3)
+        log.append(tag)
+
+    for tag in "abc":
+        env.process(proc(tag))
+    env.run()
+    assert log == list("abc")
+
+
+def test_process_return_value():
+    env = Environment()
+
+    def inner():
+        yield env.timeout(2)
+        return 42
+
+    def outer():
+        value = yield env.process(inner())
+        return value + 1
+
+    proc = env.process(outer())
+    assert env.run_until_process(proc) == 43
+    assert env.now == 2.0
+
+
+def test_event_succeed_wakes_waiter():
+    env = Environment()
+    evt = env.event()
+    got = []
+
+    def waiter():
+        value = yield evt
+        got.append((env.now, value))
+
+    def trigger():
+        yield env.timeout(7)
+        evt.succeed("payload")
+
+    env.process(waiter())
+    env.process(trigger())
+    env.run()
+    assert got == [(7.0, "payload")]
+
+
+def test_interrupt_resumes_with_cause():
+    env = Environment()
+    observed = []
+
+    def victim():
+        try:
+            yield env.timeout(100)
+        except Interrupt as exc:
+            observed.append((env.now, exc.cause))
+
+    def attacker(proc):
+        yield env.timeout(4)
+        proc.interrupt("stop")
+
+    victim_proc = env.process(victim())
+    env.process(attacker(victim_proc))
+    env.run()
+    assert observed == [(4.0, "stop")]
+
+
+def test_interrupt_deregisters_pending_timeout():
+    env = Environment()
+    resumed = []
+
+    def victim():
+        try:
+            yield env.timeout(10)
+            resumed.append("timeout")
+        except Interrupt:
+            resumed.append("interrupt")
+            yield env.timeout(100)
+            resumed.append("after")
+
+    proc = env.process(victim())
+
+    def attacker():
+        yield env.timeout(1)
+        proc.interrupt()
+
+    env.process(attacker())
+    env.run()
+    # the original timeout must NOT also resume the process
+    assert resumed == ["interrupt", "after"]
+    assert env.now == 101.0
+
+
+def test_run_until_time():
+    env = Environment()
+    ticks = []
+
+    def clock():
+        while True:
+            yield env.timeout(1)
+            ticks.append(env.now)
+
+    env.process(clock())
+    env.run(until=5.5)
+    assert ticks == [1.0, 2.0, 3.0, 4.0, 5.0]
+    assert env.now == 5.5
+
+
+def test_any_of():
+    env = Environment()
+    winner = []
+
+    def race():
+        result = yield env.any_of([env.timeout(3, "slow"), env.timeout(1, "fast")])
+        winner.append(sorted(result.values()))
+
+    env.process(race())
+    env.run()
+    assert winner == [["fast"]]
+    assert env.now >= 1.0
+
+
+def test_all_of():
+    env = Environment()
+    done = []
+
+    def gather():
+        yield env.all_of([env.timeout(2), env.timeout(5)])
+        done.append(env.now)
+
+    env.process(gather())
+    env.run()
+    assert done == [5.0]
+
+
+def test_process_exception_propagates():
+    env = Environment()
+
+    def boom():
+        yield env.timeout(1)
+        raise ValueError("kaput")
+
+    proc = env.process(boom())
+    with pytest.raises(ValueError, match="kaput"):
+        env.run_until_process(proc)
+
+
+def test_yield_already_processed_event():
+    env = Environment()
+    evt = env.event()
+    evt.succeed("early")
+    got = []
+
+    def late_waiter():
+        yield env.timeout(5)
+        value = yield evt  # already processed by now
+        got.append((env.now, value))
+
+    env.process(late_waiter())
+    env.run()
+    assert got == [(5.0, "early")]
+
+
+def test_negative_delay_rejected():
+    env = Environment()
+    with pytest.raises(ValueError):
+        env.timeout(-1)

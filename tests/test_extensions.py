@@ -1,0 +1,174 @@
+"""Tests for the paper-named extensions: multi-job, bathtub, tracing."""
+
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import MINUTES_PER_DAY as DAY
+from repro.core import Params, simulate_one
+from repro.core.bathtub import Bathtub
+from repro.core.multijob import JobSpec, MultiJobSimulation, simulate_multijob
+from repro.core.trace import Tracer
+from repro.core.simulation import ClusterSimulation
+
+
+# ---------------------------------------------------------------------------
+# multi-job
+# ---------------------------------------------------------------------------
+
+def cluster(**kw) -> Params:
+    base = dict(job_size=16, working_pool_size=64, spare_pool_size=8,
+                warm_standbys=2, job_length=1 * DAY,
+                random_failure_rate=1.0 / DAY, seed=11)
+    base.update(kw)
+    return Params(**base)
+
+
+def test_two_jobs_complete():
+    jobs = [JobSpec(job_size=16, job_length=1 * DAY, warm_standbys=2),
+            JobSpec(job_size=24, job_length=0.5 * DAY, warm_standbys=2)]
+    result = MultiJobSimulation(cluster(), jobs).run()
+    assert len(result.per_job) == 2
+    for spec, r in zip(jobs, result.per_job):
+        assert r.useful_work == pytest.approx(spec.job_length)
+        assert not r.timed_out
+    assert result.makespan >= max(r.total_time for r in result.per_job) - 1e-9
+
+
+def test_multijob_capacity_validation():
+    jobs = [JobSpec(job_size=40, job_length=DAY),
+            JobSpec(job_size=40, job_length=DAY)]
+    with pytest.raises(ValueError, match="cannot host"):
+        MultiJobSimulation(cluster(working_pool_size=64), jobs)
+
+
+def test_staggered_start():
+    jobs = [JobSpec(job_size=16, job_length=0.25 * DAY),
+            JobSpec(job_size=16, job_length=0.25 * DAY,
+                    start_time=0.5 * DAY)]
+    result = MultiJobSimulation(cluster(random_failure_rate=0.0,
+                                        systematic_failure_rate=0.0),
+                                jobs).run()
+    t0, t1 = (r.total_time for r in result.per_job)
+    assert t1 > t0  # second job started later, finished later
+
+
+def test_contention_raises_stalls():
+    """Two big jobs on a tight pool contend; the dispatcher hands
+    repaired servers to starved jobs."""
+    jobs = [JobSpec(job_size=24, job_length=1 * DAY, warm_standbys=0),
+            JobSpec(job_size=24, job_length=1 * DAY, warm_standbys=0)]
+    tight = cluster(working_pool_size=48, spare_pool_size=1,
+                    random_failure_rate=4.0 / DAY,
+                    auto_repair_time=3 * 60.0, diagnosis_probability=1.0)
+    reps = simulate_multijob(tight, jobs, n_replications=3)
+    total_stall = sum(sum(r.stall_time for r in rep.per_job)
+                      for rep in reps)
+    assert total_stall > 0.0
+    assert any(rep.stall_events > 0 for rep in reps)
+
+
+def test_multijob_reproducible():
+    jobs = [JobSpec(job_size=16, job_length=0.5 * DAY)]
+    a = MultiJobSimulation(cluster(), jobs, seed=5).run()
+    b = MultiJobSimulation(cluster(), jobs, seed=5).run()
+    assert a.per_job[0].total_time == b.per_job[0].total_time
+
+
+# ---------------------------------------------------------------------------
+# bathtub hazard
+# ---------------------------------------------------------------------------
+
+def test_bathtub_hazard_shape():
+    bt = Bathtub(mean_value=100 * DAY, infant_factor=20.0,
+                 infant_tau=7 * DAY, wear_start=200 * DAY,
+                 wear_tau=50 * DAY)
+    h0 = bt.hazard(0.0)
+    h_flat = bt.hazard(100 * DAY)
+    h_old = bt.hazard(400 * DAY)
+    assert h0 == pytest.approx(20.0 * h_flat / bt.hazard(100 * DAY) * h_flat,
+                               rel=0.1) or h0 > 5 * h_flat
+    assert h_old > h_flat  # wear-out rises
+
+
+def test_bathtub_sampling_matches_cumhazard():
+    """KS-style check: H(T) of samples should be Exp(1)-distributed."""
+    bt = Bathtub(mean_value=30 * DAY, infant_factor=10.0,
+                 infant_tau=2 * DAY, wear_start=60 * DAY, wear_tau=20 * DAY)
+    rng = np.random.default_rng(0)
+    samples = np.array([bt.sample(rng) for _ in range(2000)])
+    transformed = np.array([bt.cumulative_hazard(t) for t in samples])
+    # mean of Exp(1) is 1, variance 1
+    assert np.mean(transformed) == pytest.approx(1.0, abs=0.08)
+    assert np.var(transformed) == pytest.approx(1.0, abs=0.25)
+
+
+def test_bathtub_infant_mortality_shifts_mass_early():
+    flat = Bathtub(mean_value=30 * DAY, infant_factor=1.0)
+    infant = Bathtub(mean_value=30 * DAY, infant_factor=50.0,
+                     infant_tau=2 * DAY)
+    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(1)
+    s_flat = np.median([flat.sample(rng1) for _ in range(800)])
+    s_inf = np.median([infant.sample(rng2) for _ in range(800)])
+    assert s_inf < s_flat
+
+
+def test_bathtub_in_simulation():
+    p = Params(job_size=16, working_pool_size=22, spare_pool_size=4,
+               warm_standbys=2, job_length=1 * DAY,
+               failure_distribution="bathtub",
+               random_failure_rate=1.0 / DAY,
+               distribution_kwargs={"infant_factor": 15.0,
+                                    "infant_tau": 0.5 * DAY},
+               seed=3)
+    r = simulate_one(p)
+    assert not r.timed_out
+    assert r.useful_work == pytest.approx(p.job_length)
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+def test_tracer_records_and_exports(tmp_path):
+    p = Params(job_size=16, working_pool_size=22, spare_pool_size=4,
+               warm_standbys=2, job_length=1 * DAY,
+               random_failure_rate=2.0 / DAY, seed=7)
+    sim = ClusterSimulation(p)
+    tracer = Tracer()
+    tracer.attach(sim)
+    result = sim.run()
+
+    counts = tracer.counts()
+    assert counts.get("failure", 0) == result.n_failures
+    assert counts.get("repair_start", 0) \
+        == result.n_failures - result.n_undiagnosed
+    # n_host_selections already includes preempted spare-pool draws
+    assert counts.get("standby_swap", 0) + counts.get("host_selection", 0) \
+        == result.n_standby_swaps + result.n_host_selections
+
+    csv_path = str(tmp_path / "trace.csv")
+    tracer.write_csv(csv_path)
+    assert os.path.getsize(csv_path) > 0
+    chrome_path = str(tmp_path / "trace.json")
+    tracer.write_chrome_trace(chrome_path)
+    assert os.path.getsize(chrome_path) > 0
+    assert "failure" in tracer.summary()
+
+
+def test_tracer_repeat_offenders():
+    p = Params(job_size=8, working_pool_size=12, spare_pool_size=2,
+               warm_standbys=1, job_length=4 * DAY,
+               systematic_failure_fraction=0.5,
+               systematic_failure_rate=20.0 / DAY,
+               auto_repair_failure_probability=1.0,
+               manual_repair_failure_probability=1.0,
+               random_failure_rate=0.1 / DAY, seed=1)
+    sim = ClusterSimulation(p)
+    tracer = Tracer()
+    tracer.attach(sim)
+    sim.run()
+    offenders = tracer.repeat_offenders(top=3)
+    assert offenders and offenders[0][1] >= 2  # chronic bad server visible

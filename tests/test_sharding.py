@@ -1,0 +1,100 @@
+"""Sharding-rule unit tests (pure functions over (path, shape, mesh))."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_mesh
+from repro.parallel.sharding import (ParallelConfig, activation_spec,
+                                     mesh_axes, param_spec)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # CPU test container has 1 device unless a dryrun-style subprocess
+    # sets XLA_FLAGS; build an abstract mesh over a device grid of 1 —
+    # shard_if() uses mesh.shape sizes, so use a fake via AbstractMesh.
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def pod_mesh():
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_mesh_axes(mesh, pod_mesh):
+    assert mesh_axes(mesh) == (("data",), "model")
+    assert mesh_axes(pod_mesh) == (("pod", "data"), "model")
+
+
+def test_attention_weights(mesh):
+    # stacked (n_sb, D, H, hd): heads over model, D over data
+    assert param_spec("stack/layer0/attn/wq", (36, 2048, 16, 128), mesh) \
+        == P(None, ("data",), "model", None)
+    # MQA kv=1 cannot shard heads -> replicated head dim
+    assert param_spec("stack/layer0/attn/wk", (88, 6144, 1, 128), mesh) \
+        == P(None, ("data",), None, None)
+    assert param_spec("stack/layer0/attn/wo", (36, 16, 128, 2048), mesh) \
+        == P(None, "model", None, ("data",))
+
+
+def test_mlp_and_moe_weights(mesh):
+    assert param_spec("stack/layer0/mlp/wg", (36, 2048, 11008), mesh) \
+        == P(None, ("data",), "model")
+    assert param_spec("stack/layer0/mlp/wd", (36, 11008, 2048), mesh) \
+        == P(None, "model", ("data",))
+    # MoE experts over model, d_model over data
+    assert param_spec("stack/layer0/moe/wg", (61, 384, 7168, 2048), mesh) \
+        == P(None, "model", ("data",), None)
+    assert param_spec("stack/layer0/moe/wd", (61, 384, 2048, 7168), mesh) \
+        == P(None, "model", None, ("data",))
+    # 16 experts on a 16-way axis still shard
+    assert param_spec("stack/layer0/moe/wg", (9, 16, 8192, 24576), mesh) \
+        == P(None, "model", ("data",), None)
+
+
+def test_embeddings(mesh):
+    assert param_spec("embed", (151936, 2048), mesh) \
+        == P("model", ("data",))
+    assert param_spec("head", (2048, 151936), mesh) \
+        == P(("data",), "model")
+    # odd vocab cannot shard over 16
+    assert param_spec("embed", (122753, 2304), mesh) == P(None, ("data",))
+
+
+def test_mamba_weights(mesh):
+    assert param_spec("stack/layer0/ssm/in_proj", (64, 4096, 16384), mesh) \
+        == P(None, ("data",), "model")
+    assert param_spec("stack/layer0/ssm/A_log", (64, 8192, 16), mesh) \
+        == P(None, "model", None)
+    assert param_spec("stack/layer0/ssm/out_proj", (64, 8192, 4096), mesh) \
+        == P(None, "model", ("data",))
+
+
+def test_norms_replicated(mesh):
+    assert param_spec("stack/layer0/norm1/scale", (36, 2048), mesh) \
+        == P(None, None)
+    assert param_spec("final_norm/scale", (2048,), mesh) == P(None)
+
+
+def test_indivisible_dims_not_sharded(mesh):
+    # d_model 2304 % 16 == 0 -> sharded; 2305 would not be
+    spec = param_spec("stack/layer0/mlp/wg", (40, 2305, 5760), mesh)
+    assert spec == P(None, None, "model")
+
+
+def test_pod_axis_joins_fsdp(pod_mesh):
+    spec = param_spec("stack/layer0/mlp/wg", (36, 2048, 11008), pod_mesh)
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_activation_spec_sequence_sharding(mesh):
+    assert activation_spec(mesh, 256, 4096) == P(("data",), "model", None)
+    off = ParallelConfig(shard_sequence=False)
+    assert activation_spec(mesh, 256, 4096, off) == P(("data",), None, None)
+    # batch=1 long-context: no batch sharding
+    assert activation_spec(mesh, 1, 524288) == P(None, "model", None)

@@ -1,0 +1,93 @@
+"""Sweep harness tests (OneWaySweep / TwoWaySweep / experiment files)."""
+
+import json
+import os
+
+import pytest
+import yaml
+
+from repro.core import MINUTES_PER_DAY as DAY
+from repro.core import OneWaySweep, Params, TwoWaySweep, load_experiment
+
+BASE = Params(job_size=16, working_pool_size=22, spare_pool_size=4,
+              warm_standbys=2, job_length=0.5 * DAY,
+              random_failure_rate=1.0 / DAY)
+
+
+def test_one_way_sweep_shape_and_columns():
+    sweep = OneWaySweep("recovery", "recovery_time", [5.0, 20.0, 40.0],
+                        n_replications=2, base_params=BASE)
+    result = sweep.run()
+    rows = result.to_rows()
+    assert len(rows) == 3
+    assert [r["recovery_time"] for r in rows] == [5.0, 20.0, 40.0]
+    assert all("total_time" in r and "n_failures" in r for r in rows)
+    # more recovery -> more total time (common random numbers)
+    ts = result.column("total_time")
+    assert ts[0] < ts[2]
+
+
+def test_two_way_sweep_cross_product():
+    sweep = TwoWaySweep("grid", "recovery_time", [10.0, 30.0],
+                        "warm_standbys", [0, 4],
+                        n_replications=2, base_params=BASE)
+    result = sweep.run()
+    assert len(result.points) == 4
+    combos = {(p.values["recovery_time"], p.values["warm_standbys"])
+              for p in result.points}
+    assert combos == {(10.0, 0), (10.0, 4), (30.0, 0), (30.0, 4)}
+
+
+def test_virtual_multiplier_parameter():
+    sweep = OneWaySweep("sys-mult", "systematic_failure_rate_multiplier",
+                        [0, 10], n_replications=2, base_params=BASE)
+    result = sweep.run()
+    f0 = result.points[0].stats["n_systematic_failures"].mean
+    f10 = result.points[1].stats["n_systematic_failures"].mean
+    assert f0 == 0.0
+    assert f10 > 0.0
+
+
+def test_unknown_parameter_raises():
+    with pytest.raises(ValueError, match="unknown parameter"):
+        OneWaySweep("x", "not_a_param", [1], base_params=BASE).run()
+
+
+def test_csv_and_json_output(tmp_path):
+    sweep = OneWaySweep("r", "recovery_time", [10.0, 20.0],
+                        n_replications=2, base_params=BASE)
+    result = sweep.run()
+    csv_path = str(tmp_path / "out.csv")
+    json_path = str(tmp_path / "out.json")
+    result.write_csv(csv_path)
+    result.write_json(json_path)
+    assert os.path.exists(csv_path)
+    with open(json_path) as f:
+        data = json.load(f)
+    assert data["parameters"] == ["recovery_time"]
+    assert len(data["rows"]) == 2
+
+
+def test_load_experiment_yaml(tmp_path):
+    spec = {
+        "base_params": {"job_size": 16, "working_pool_size": 22,
+                        "spare_pool_size": 4, "warm_standbys": 2,
+                        "job_length": 0.25 * DAY},
+        "n_replications": 2,
+        "sweeps": [
+            {"title": "recovery", "parameter": "recovery_time",
+             "values": [10, 20]},
+            {"title": "grid", "parameter_a": "recovery_time",
+             "values_a": [10], "parameter_b": "warm_standbys",
+             "values_b": [0, 2]},
+        ],
+    }
+    path = str(tmp_path / "exp.yaml")
+    with open(path, "w") as f:
+        yaml.safe_dump(spec, f)
+    sweeps = load_experiment(path)
+    assert len(sweeps) == 2
+    r0 = sweeps[0].run()
+    assert len(r0.points) == 2
+    r1 = sweeps[1].run()
+    assert len(r1.points) == 2

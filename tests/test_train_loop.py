@@ -1,0 +1,236 @@
+"""End-to-end training substrate: loop, checkpoint/restart, data pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeSpec
+from repro.core.params import Params as ClusterParams
+from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                    restore_checkpoint, save_checkpoint)
+from repro.train.fault_tolerance import StragglerPolicy
+from repro.train.loop import TrainLoopConfig, checkpoint_cadence, train
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   init_opt_state, lr_at)
+
+SHAPE = ShapeSpec("tiny_train", 32, 4, "train")
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic_loss():
+    cfg = OptimizerConfig(learning_rate=0.1, warmup_steps=0, total_steps=100,
+                          weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}   # d/dw of w^2
+        params, state, stats = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert stats["grad_norm"] >= 0
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10,
+                          total_steps=100, min_lr_fraction=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_grad_clipping():
+    cfg = OptimizerConfig(learning_rate=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params, cfg)
+    _, _, stats = adamw_update(params, {"w": jnp.asarray([1e3, 0., 0.])},
+                               state, cfg)
+    assert float(stats["grad_norm"]) == pytest.approx(1e3)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=4, seed=7)
+    p1 = SyntheticTokenPipeline(cfg)
+    batches = [next(p1) for _ in range(5)]
+    p2 = SyntheticTokenPipeline(cfg)
+    p2.seek(3)
+    np.testing.assert_array_equal(next(p2)["tokens"], batches[3]["tokens"])
+    # labels are tokens shifted by one
+    np.testing.assert_array_equal(batches[0]["labels"][:, :-1],
+                                  batches[0]["tokens"][:, 1:])
+
+
+def test_pipeline_shards_are_disjoint():
+    a = SyntheticTokenPipeline(DataConfig(1000, 16, 8, seed=1, n_shards=2,
+                                          shard_id=0)).batch_at(0)
+    b = SyntheticTokenPipeline(DataConfig(1000, 16, 8, seed=1, n_shards=2,
+                                          shard_id=1)).batch_at(0)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_state_roundtrip():
+    cfg = DataConfig(100, 8, 2, seed=3)
+    p = SyntheticTokenPipeline(cfg)
+    for _ in range(4):
+        next(p)
+    state = p.state_dict()
+    q = SyntheticTokenPipeline(cfg)
+    q.load_state_dict(state)
+    np.testing.assert_array_equal(next(p)["tokens"], next(q)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+             "opt": {"step": np.int32(7)}}
+    save_checkpoint(str(tmp_path), 7, state, extra={"data_step": 7})
+    step, restored, extra = restore_checkpoint(str(tmp_path))
+    assert step == 7 and extra["data_step"] == 7
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  state["params"]["w"])
+
+
+def test_checkpoint_bfloat16_roundtrip(tmp_path):
+    """bf16 leaves bit-cast through npz (raw void otherwise) — regression
+    for the production dtype of every full-size config."""
+    import ml_dtypes
+    w = np.arange(16, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    state = {"params": {"w": w}, "opt": {"v": np.float32(2.0)}}
+    save_checkpoint(str(tmp_path), 3, state)
+    _, restored, _ = restore_checkpoint(str(tmp_path))
+    assert restored["params"]["w"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        restored["params"]["w"].view(np.uint16), w.view(np.uint16))
+    # and it must be jnp-consumable (the restart path)
+    arr = jnp.asarray(restored["params"]["w"])
+    assert arr.dtype == jnp.bfloat16
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    state = {"w": np.ones(64, np.float32)}
+    path = save_checkpoint(str(tmp_path), 1, state)
+    # corrupt the shard
+    import numpy as _np
+    shard = os.path.join(path, "shard_00000.npz")
+    with _np.load(shard) as z:
+        data = {k: z[k] for k in z.files}
+    data["w"][:8] = -99.0
+    _np.savez(shard, **data)
+    with pytest.raises(IOError, match="checksum"):
+        restore_checkpoint(str(tmp_path))
+
+
+def test_async_checkpointer_keeps_latest(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ck.save(step, {"w": np.full(4, step, np.float32)})
+    ck.close()
+    assert latest_step(str(tmp_path)) == 4
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert len(steps) <= 2
+
+
+# ---------------------------------------------------------------------------
+# straggler policy
+# ---------------------------------------------------------------------------
+
+def test_straggler_policy_fires_after_patience():
+    pol = StragglerPolicy(threshold=2.0, patience=2, window=16)
+    fired = []
+    for i in range(10):
+        fired.append(pol.observe(1.0))
+    for i in range(3):
+        fired.append(pol.observe(5.0))
+    assert any(fired)
+    assert pol.n_stragglers >= 2
+
+
+# ---------------------------------------------------------------------------
+# end-to-end loop (tiny model, real steps on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup(tmp_path_factory):
+    cfg = get_config("qwen2.5-3b", smoke=True).replace(dtype="float32")
+    bundle = build_model(cfg)
+    mesh = make_host_mesh()
+    return cfg, bundle, mesh
+
+
+def test_train_loop_runs_and_loss_finite(tiny_setup, tmp_path):
+    cfg, bundle, mesh = tiny_setup
+    out = train(bundle, mesh, SHAPE,
+                TrainLoopConfig(total_steps=8, log_every=2,
+                                checkpoint_dir=str(tmp_path / "ck"),
+                                checkpoint_every=4),
+                OptimizerConfig(learning_rate=1e-3, warmup_steps=2,
+                                total_steps=8))
+    assert out["steps"] == 8
+    assert np.isfinite(out["final_loss"])
+    assert latest_step(str(tmp_path / "ck")) == 8
+
+
+def test_train_loop_restarts_from_checkpoint(tiny_setup, tmp_path):
+    """Inject a failure mid-run; the loop must restore and converge on the
+    same step count, with lost steps accounted."""
+    cfg, bundle, mesh = tiny_setup
+    ckdir = str(tmp_path / "ck2")
+    out = train(bundle, mesh, SHAPE,
+                TrainLoopConfig(total_steps=10, log_every=5,
+                                checkpoint_dir=ckdir, checkpoint_every=3,
+                                inject_failures=True,
+                                deterministic_failure_steps=[7],
+                                cluster=ClusterParams(
+                                    random_failure_rate=0.0,
+                                    systematic_failure_rate=0.0)),
+                OptimizerConfig(learning_rate=1e-3, warmup_steps=2,
+                                total_steps=10))
+    assert out["recovery"]["n_failures"] == 1
+    assert out["recovery"]["n_restores"] == 1
+    assert out["recovery"]["lost_steps"] == 1   # 7 -> back to checkpoint @6
+    assert out["steps"] >= 10
+    assert np.isfinite(out["final_loss"])
+
+
+def test_resume_after_process_restart(tiny_setup, tmp_path):
+    """Simulates a full job restart: second train() call resumes from the
+    checkpoint directory rather than starting over."""
+    cfg, bundle, mesh = tiny_setup
+    ckdir = str(tmp_path / "ck3")
+    train(bundle, mesh, SHAPE,
+          TrainLoopConfig(total_steps=4, checkpoint_dir=ckdir,
+                          checkpoint_every=2),
+          OptimizerConfig(warmup_steps=1, total_steps=8))
+    out = train(bundle, mesh, SHAPE,
+                TrainLoopConfig(total_steps=8, checkpoint_dir=ckdir,
+                                checkpoint_every=2),
+                OptimizerConfig(warmup_steps=1, total_steps=8))
+    assert out["steps"] == 4  # resumed at 4, ran to 8
+
+
+def test_checkpoint_cadence_from_young_daly():
+    cluster = ClusterParams()  # paper defaults
+    cfg = TrainLoopConfig(checkpoint_cost_minutes=1.0, step_minutes=1.0,
+                          cluster=cluster)
+    cadence = checkpoint_cadence(cfg)
+    # MTBF ~ 1/0.0305 per min -> tau = sqrt(2*1*32.8) ~ 8.1 steps
+    assert 2 <= cadence <= 30
+
+
+def test_checkpoint_cadence_explicit_override():
+    assert checkpoint_cadence(TrainLoopConfig(checkpoint_every=17)) == 17

@@ -1,0 +1,124 @@
+"""Vectorized CTMC engine vs the event-driven oracle (+ properties)."""
+
+import numpy as np
+import pytest
+
+from repro.core import MINUTES_PER_DAY as DAY
+from repro.core import Params, simulate
+from repro.core.vectorized import default_max_steps, simulate_ctmc, supports
+
+N_EVENT = 48
+N_CTMC = 768
+
+
+def compare(p: Params, metrics, n_event=N_EVENT, n_ctmc=N_CTMC, z_tol=3.5):
+    out = simulate_ctmc(p, n_replicas=n_ctmc, seed=0)
+    assert out["completed"].mean() > 0.99, "CTMC replicas did not finish"
+    res = simulate(p, n_event)
+    report = {}
+    for m in metrics:
+        ev = np.array([getattr(r, m) for r in res], float)
+        ct = out[m]
+        se = np.sqrt(ct.std() ** 2 / len(ct) + ev.std(ddof=1) ** 2 / len(ev))
+        z = (ev.mean() - ct.mean()) / max(se, 1e-9)
+        report[m] = (ev.mean(), ct.mean(), z)
+        assert abs(z) < z_tol, (m, report[m])
+    return report
+
+
+def test_equivalence_default_regime():
+    p = Params(job_size=64, working_pool_size=72, spare_pool_size=16,
+               warm_standbys=4, job_length=4 * DAY,
+               random_failure_rate=0.5 / DAY, seed=3)
+    compare(p, ["total_time", "n_failures", "n_random_failures",
+                "n_systematic_failures", "n_auto_repairs",
+                "n_manual_repairs", "n_standby_swaps", "recovery_overhead"])
+
+
+def test_equivalence_starved_regime():
+    """Pools near-empty: stalls and preemptions must match too."""
+    p = Params(job_size=32, working_pool_size=33, spare_pool_size=2,
+               warm_standbys=1, job_length=2 * DAY,
+               random_failure_rate=2.0 / DAY, auto_repair_time=240.0,
+               manual_repair_time=2880.0, diagnosis_probability=1.0, seed=5)
+    compare(p, ["total_time", "n_failures", "n_preemptions",
+                "n_host_selections", "stall_time"])
+
+
+def test_equivalence_diagnosis_regime():
+    p = Params(job_size=48, working_pool_size=56, spare_pool_size=8,
+               warm_standbys=4, job_length=2 * DAY,
+               random_failure_rate=1.0 / DAY,
+               diagnosis_probability=0.6, diagnosis_uncertainty=0.3, seed=7)
+    compare(p, ["total_time", "n_failures", "n_undiagnosed",
+                "n_misdiagnosed"])
+
+
+def test_zero_failures_exact():
+    p = Params(job_size=16, working_pool_size=20, spare_pool_size=2,
+               warm_standbys=2, job_length=1 * DAY,
+               random_failure_rate=0.0, systematic_failure_rate=0.0)
+    out = simulate_ctmc(p, n_replicas=8, max_steps=128)
+    np.testing.assert_allclose(
+        out["total_time"], p.host_selection_time + p.job_length, rtol=1e-5)
+    assert (out["n_failures"] == 0).all()
+
+
+def test_unsupported_params_rejected():
+    assert not supports(Params(retirement_threshold=3))
+    assert not supports(Params(failure_distribution="weibull"))
+    assert not supports(Params(checkpoint_interval=60.0))
+    with pytest.raises(ValueError):
+        simulate_ctmc(Params(retirement_threshold=3), n_replicas=4)
+
+
+def test_conservation_of_servers():
+    """Total server count is invariant across the simulation."""
+    p = Params(job_size=32, working_pool_size=40, spare_pool_size=8,
+               warm_standbys=4, job_length=1 * DAY,
+               random_failure_rate=2.0 / DAY, seed=9)
+    import jax
+    from repro.core.vectorized import (_initial_state, _params_vector,
+                                       _step)
+    R = 16
+    state = _initial_state(p, R)
+    total0 = sum(np.asarray(state[k]).sum(-1) for k in
+                 ("run", "sb", "auto", "man", "fw", "fs"))
+    pv = _params_vector(p)
+    key = jax.random.PRNGKey(0)
+    for i in range(200):
+        state = _step(state, jax.random.fold_in(key, i), pv, None)
+    total = sum(np.asarray(state[k]).sum(-1) for k in
+                ("run", "sb", "auto", "man", "fw", "fs"))
+    np.testing.assert_allclose(total, total0, atol=1e-3)
+    # no compartment may go negative
+    for k in ("run", "sb", "auto", "man", "fw", "fs"):
+        assert (np.asarray(state[k]) > -1e-3).all(), k
+
+
+def test_monotone_in_failure_rate():
+    base = dict(job_size=32, working_pool_size=40, spare_pool_size=8,
+                warm_standbys=4, job_length=2 * DAY)
+    lo = simulate_ctmc(Params(random_failure_rate=0.2 / DAY, **base),
+                       n_replicas=512, seed=0)
+    hi = simulate_ctmc(Params(random_failure_rate=2.0 / DAY, **base),
+                       n_replicas=512, seed=0)
+    assert hi["n_failures"].mean() > lo["n_failures"].mean()
+    assert hi["total_time"].mean() > lo["total_time"].mean()
+
+
+def test_deterministic_given_seed():
+    p = Params(job_size=16, working_pool_size=20, spare_pool_size=4,
+               warm_standbys=2, job_length=1 * DAY,
+               random_failure_rate=1.0 / DAY)
+    a = simulate_ctmc(p, n_replicas=64, seed=11)
+    b = simulate_ctmc(p, n_replicas=64, seed=11)
+    np.testing.assert_array_equal(a["total_time"], b["total_time"])
+
+
+def test_max_steps_headroom():
+    p = Params(job_size=64, working_pool_size=72, spare_pool_size=8,
+               warm_standbys=4, job_length=2 * DAY,
+               random_failure_rate=1.0 / DAY)
+    assert default_max_steps(p) > 2 * p.expected_failures_per_minute() \
+        * p.job_length
