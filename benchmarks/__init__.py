@@ -1,0 +1,1 @@
+"""Benchmark package (run with ``PYTHONPATH=src python -m benchmarks.run``)."""

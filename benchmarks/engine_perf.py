@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MINUTES_PER_DAY, Params, simulate
+from repro.core import MINUTES_PER_DAY, OneWaySweep, Params, simulate
 from repro.core.vectorized import default_max_steps, simulate_ctmc
 from repro.kernels import ops
 
@@ -77,6 +77,69 @@ def event_race_kernel(R: int = 65536, iters: int = 20) -> Dict[str, float]:
             "us_per_call": dt / iters * 1e6}
 
 
+def sweep_bench_params() -> Params:
+    """Mid-size cluster: large enough that the event engine does real
+    per-event work, small enough that the full event-side grid finishes
+    in tens of seconds."""
+    return Params(job_size=512, working_pool_size=560, spare_pool_size=64,
+                  warm_standbys=16, job_length=2 * MINUTES_PER_DAY,
+                  random_failure_rate=0.25 / MINUTES_PER_DAY, seed=0)
+
+
+def sweep_throughput(n_points: int = 8, n_replicas: int = 256,
+                     ) -> Dict[str, object]:
+    """Grid-sweep wall clock: batched CTMC engine vs the event-driven loop.
+
+    Runs the same ``n_points x n_replicas`` recovery-time sweep through
+    ``OneWaySweep`` twice — ``engine="ctmc"`` (one compiled XLA program
+    for the whole grid) and ``engine="event"`` (the sequential generator
+    engine) — and reports wall clock, speedup, and per-point agreement of
+    the ``total_time`` means in pooled-standard-error units.
+    """
+    base = sweep_bench_params()
+    values = [float(v) for v in np.linspace(5.0, 40.0, n_points)]
+    kw = dict(n_replications=n_replicas, base_params=base, base_seed=0)
+
+    ctmc_sweep = OneWaySweep("sweep-bench", "recovery_time", values,
+                             engine="ctmc", **kw)
+    t0 = time.perf_counter()
+    ct = ctmc_sweep.run()
+    compile_s = time.perf_counter() - t0   # includes one-off XLA compile
+    t0 = time.perf_counter()
+    ct = ctmc_sweep.run()
+    ctmc_s = time.perf_counter() - t0
+
+    event_sweep = OneWaySweep("sweep-bench", "recovery_time", values,
+                              engine="event", **kw)
+    t0 = time.perf_counter()
+    ev = event_sweep.run()
+    event_s = time.perf_counter() - t0
+
+    points = []
+    for pc, pe in zip(ct.points, ev.points):
+        sc, se_ = pc.stats["total_time"], pe.stats["total_time"]
+        pooled_se = np.sqrt(sc.std ** 2 / pc.n_replications
+                            + se_.std ** 2 / pe.n_replications)
+        points.append({
+            "recovery_time": pc.values["recovery_time"],
+            "ctmc_total_time_mean": sc.mean,
+            "event_total_time_mean": se_.mean,
+            "pooled_se": float(pooled_se),
+            "z": float((sc.mean - se_.mean) / max(pooled_se, 1e-9)),
+        })
+    return {
+        "n_points": n_points,
+        "n_replicas": n_replicas,
+        "event_wall_s": event_s,
+        "ctmc_wall_s": ctmc_s,
+        "ctmc_compile_wall_s": compile_s,
+        "speedup_x": event_s / ctmc_s,
+        "speedup_x_incl_compile": event_s / compile_s,
+        "max_abs_z": max(abs(p["z"]) for p in points),
+        "points": points,
+    }
+
+
 def speedup_summary() -> Dict[str, float]:
     ev = event_engine_throughput(n_runs=3)
     ct = ctmc_engine_throughput(n_replicas=2048)
@@ -88,3 +151,26 @@ def speedup_summary() -> Dict[str, float]:
             "speedup_x": ev_per_traj / ct_per_traj,
             **{f"event_{k}": v for k, v in ev.items()},
             **{f"ctmc_{k}": v for k, v in ct.items()}}
+
+
+def write_sweep_artifact(sw: Dict[str, object],
+                         path: str = "BENCH_sweep.json") -> str:
+    """Persist the sweep benchmark as the machine-readable perf artifact.
+
+    Lives at the repo root (not under results/) on purpose: it is the
+    tracked perf trajectory, committed so regressions show up in review.
+    """
+    import json
+
+    with open(path, "w") as f:
+        json.dump(sw, f, indent=2)
+    return path
+
+
+if __name__ == "__main__":   # quick standalone: just the sweep benchmark
+    import json
+
+    sw = sweep_throughput()
+    print(json.dumps({k: v for k, v in sw.items() if k != "points"},
+                     indent=2))
+    print("wrote", write_sweep_artifact(sw))

@@ -6,6 +6,8 @@ writes the full tables/plots under results/.
   * fig2a / fig2b        — paper Fig 2 reproductions (two-way sweeps)
   * table1_sensitivity   — the remaining Table-I knobs x pool size
   * engine_event / engine_ctmc / kernel_event_race — engine throughput
+  * engine_sweep         — batched-CTMC vs event-driven grid sweep; also
+    written as machine-readable BENCH_sweep.json (perf trajectory for CI)
   * roofline             — per (arch x shape) table from results/dryrun.json
     (run ``python -m repro.launch.dryrun`` first; skipped if absent)
 
@@ -73,6 +75,15 @@ def main() -> None:
     sp = engine_perf.speedup_summary()
     _row("engine_speedup", 0.0,
          f"ctmc {sp['speedup_x']:.1f}x faster per trajectory")
+
+    t0 = time.perf_counter()
+    sw = engine_perf.sweep_throughput(n_points=8,
+                                      n_replicas=64 if FAST else 256)
+    _row("engine_sweep", (time.perf_counter() - t0) * 1e6,
+         f"batched ctmc {sw['speedup_x']:.1f}x faster than event loop "
+         f"({sw['event_wall_s']:.1f}s -> {sw['ctmc_wall_s']:.2f}s, "
+         f"max |z| {sw['max_abs_z']:.2f})")
+    engine_perf.write_sweep_artifact(sw)
 
     # roofline table from the dry-run artifact
     dryrun_path = os.path.join(RESULTS, "dryrun.json")

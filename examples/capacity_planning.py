@@ -4,7 +4,8 @@ Question: how many servers beyond the 4096-server job minimum should the
 working pool hold?  Too few -> preemptions and stalls; too many -> wasted
 energy and capacity.
 
-Uses the vectorized CTMC engine to sweep working-pool sizes at the exact
+Runs a OneWaySweep over working-pool sizes through the engine-dispatch
+layer (``engine="ctmc"`` -> the vectorized batched path) at the exact
 Table-I parameters, cross-checks the analytic spare-capacity bound, and
 prints a recommendation.
 
@@ -13,15 +14,14 @@ prints a recommendation.
 
 import argparse
 
-import numpy as np
-
-from repro.core import (MINUTES_PER_DAY, Params, repair_shop_occupancy,
-                        spare_capacity_bound)
-from repro.core.vectorized import simulate_ctmc
+from repro.core import (MINUTES_PER_DAY, OneWaySweep, Params,
+                        repair_shop_occupancy, spare_capacity_bound)
 
 parser = argparse.ArgumentParser()
 parser.add_argument("--fast", action="store_true", help="fewer replicas")
 parser.add_argument("--job-days", type=float, default=32.0)
+parser.add_argument("--engine", choices=("auto", "event", "ctmc"),
+                    default="ctmc")
 args = parser.parse_args()
 
 N_REP = 64 if args.fast else 256
@@ -34,18 +34,19 @@ print(f"analytic repair-shop occupancy : "
 print(f"analytic 99% spare bound       : "
       f"{spare_capacity_bound(base):6.1f} servers above the job\n")
 
+sweep = OneWaySweep("capacity", "working_pool_size", POOLS,
+                    n_replications=N_REP, base_params=base,
+                    engine=args.engine)
 rows = []
-for pool in POOLS:
-    p = base.replace(working_pool_size=pool)
-    out = simulate_ctmc(p, n_replicas=N_REP, seed=0)
-    t = out["total_time"]
+for point in sweep.run().points:
+    pool = point.values["working_pool_size"]
     rows.append({
         "pool": pool,
-        "extra": pool - p.job_size - p.warm_standbys,
-        "hours": t.mean() / 60,
-        "ci": 1.96 * t.std() / np.sqrt(N_REP) / 60,
-        "stall_h": out["stall_time"].mean() / 60,
-        "preempt": out["n_preemptions"].mean(),
+        "extra": pool - base.job_size - base.warm_standbys,
+        "hours": point.stats["total_time"].mean / 60,
+        "ci": point.stats["total_time"].ci95_halfwidth(N_REP) / 60,
+        "stall_h": point.stats["stall_time"].mean / 60,
+        "preempt": point.stats["n_preemptions"].mean,
     })
 
 print(f"{'pool':>6} {'extra':>6} {'train hours':>14} {'stall h':>9} "

@@ -15,11 +15,14 @@ import argparse
 
 import numpy as np
 
-from repro.core import MINUTES_PER_DAY, Params, simulate
-from repro.core.vectorized import simulate_ctmc, supports
+from repro.core import (MINUTES_PER_DAY, Params, resolve_engine,
+                        run_replications, simulate)
+from repro.core.vectorized import supports
 
 parser = argparse.ArgumentParser()
 parser.add_argument("--fast", action="store_true")
+parser.add_argument("--engine", choices=("auto", "event", "ctmc"),
+                    default="auto")
 args = parser.parse_args()
 N = 96 if args.fast else 384
 
@@ -30,15 +33,18 @@ BASE = Params(job_size=1024, working_pool_size=1056, spare_pool_size=128,
 
 
 def run(p: Params, label: str) -> float:
-    if supports(p):
-        out = simulate_ctmc(p, n_replicas=N, seed=0)
-        hours = out["total_time"].mean() / 60
-        util = out["useful_work"].mean() / out["total_time"].mean()
-    else:  # retirement etc. -> event-driven engine
-        res = simulate(p, max(N // 24, 8))
-        hours = np.mean([r.total_time for r in res]) / 60
-        util = np.mean([r.effective_utilization for r in res])
-    print(f"  {label:44s} {hours:9.1f} h   utilization {util * 100:6.2f}%")
+    # a forced --engine ctmc would raise on retirement scenarios; let
+    # those degrade to auto (-> event) instead of crashing the tour
+    eng = "auto" if (args.engine == "ctmc" and not supports(p)) \
+        else args.engine
+    # replica budget follows the engine that will actually run: the
+    # vectorized path gets the full count, the sequential one a slice
+    n = N if resolve_engine(p, eng) == "ctmc" else max(N // 24, 8)
+    rep = run_replications(p, n, engine=eng)
+    hours = rep.stats["total_time"].mean / 60
+    util = 1.0 - rep.stats["overhead_fraction"].mean
+    print(f"  {label:44s} {hours:9.1f} h   utilization {util * 100:6.2f}%"
+          f"   [{rep.engine}]")
     return hours
 
 

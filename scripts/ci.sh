@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (what the roadmap calls "tier-1
+# verify"), plus the machine-readable sweep-performance artifact.
+#
+#   scripts/ci.sh           # tests only
+#   scripts/ci.sh --bench   # tests + sweep benchmark -> BENCH_sweep.json
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--bench" ]]; then
+    python benchmarks/engine_perf.py
+fi

@@ -14,6 +14,7 @@ implemented as a composable library:
   * :mod:`sweeps`        — OneWaySweep / TwoWaySweep experiment harness
   * :mod:`analytical`    — closed-form cross-checks + Young/Daly cadence
   * :mod:`vectorized`    — JAX CTMC engine for massive parameter sweeps
+  * :mod:`backend`       — engine dispatch (auto | event | ctmc)
 """
 
 from . import bathtub as _bathtub  # noqa: F401  (registers "bathtub" dist)
@@ -28,8 +29,10 @@ from .trace import TraceEvent, Tracer
 from .distributions import (Deterministic, Distribution, Exponential,
                             LogNormal, Weibull, make_distribution,
                             register_distribution)
+from .backend import (Replications, resolve_engine, run_replications,
+                      run_replications_batch)
 from .engine import Environment, Event, Interrupt, Process, Timeout
-from .metrics import RunResult, Stat, aggregate, summarize
+from .metrics import RunResult, Stat, aggregate, aggregate_arrays, summarize
 from .params import MINUTES_PER_DAY, PAPER_TABLE1_RANGES, Params, paper_table1_defaults
 from .simulation import ClusterSimulation, simulate, simulate_one
 from .sweeps import OneWaySweep, SweepResult, TwoWaySweep, load_experiment
@@ -39,11 +42,12 @@ __all__ = [
     "Distribution", "Environment", "Event", "Exponential", "Interrupt",
     "JobSpec", "LogNormal", "MINUTES_PER_DAY", "MultiJobResult",
     "MultiJobSimulation", "OneWaySweep", "PAPER_TABLE1_RANGES", "Params",
-    "Process", "RunResult", "Stat", "SweepResult", "Timeout", "TraceEvent",
-    "Tracer", "TwoWaySweep", "Weibull", "aggregate", "cluster_failure_rate",
-    "expected_failures", "expected_total_time", "load_experiment",
-    "make_distribution", "paper_table1_defaults", "plan_checkpoints",
-    "register_distribution", "repair_shop_occupancy", "simulate",
-    "simulate_multijob", "simulate_one", "spare_capacity_bound", "summarize",
-    "young_daly_interval",
+    "Process", "Replications", "RunResult", "Stat", "SweepResult", "Timeout",
+    "TraceEvent", "Tracer", "TwoWaySweep", "Weibull", "aggregate",
+    "aggregate_arrays", "cluster_failure_rate", "expected_failures",
+    "expected_total_time", "load_experiment", "make_distribution",
+    "paper_table1_defaults", "plan_checkpoints", "register_distribution",
+    "repair_shop_occupancy", "resolve_engine", "run_replications",
+    "run_replications_batch", "simulate", "simulate_multijob", "simulate_one",
+    "spare_capacity_bound", "summarize", "young_daly_interval",
 ]

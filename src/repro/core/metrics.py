@@ -111,11 +111,60 @@ def aggregate(results: Sequence[RunResult]) -> Dict[str, Stat]:
     out: Dict[str, Stat] = {}
     for name in _SCALAR_METRICS:
         out[name] = Stat.of([float(getattr(r, name)) for r in results])
+    out["completed"] = Stat.of([0.0 if r.timed_out else 1.0
+                                for r in results])
     # run durations pooled across replications
     pooled: List[float] = []
     for r in results:
         pooled.extend(r.run_durations)
     out["run_duration_pooled"] = Stat.of(pooled)
+    return out
+
+
+def aggregate_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, Stat]:
+    """:func:`aggregate`-compatible statistics from per-replica arrays.
+
+    Input is the ``{metric: (R,) ndarray}`` dict produced by the
+    vectorized CTMC engine (:mod:`repro.core.vectorized`).  Metrics
+    absent from the arrays are filled with zeros — currently only
+    ``n_retired``, which is exactly zero inside the CTMC envelope
+    (``supports`` requires ``retirement_threshold == 0``).  Derived
+    metrics are computed from the raw arrays:
+
+      * ``overhead_fraction``  = 1 - useful_work / total_time
+      * ``mean_run_duration``  ~ total_time / (n_failures + 1) — the
+        event engine records exact durations between restarts; compartment
+        counts cannot, so this is the per-replica average interval.
+
+    ``run_duration_pooled`` pools those per-replica averages.
+    """
+    some = next(iter(arrays.values()))
+    R = len(some)
+    zeros = np.zeros(R, dtype=np.float64)
+    total_time = np.asarray(arrays["total_time"], np.float64)
+    safe_total = np.maximum(total_time, 1e-12)
+    derived = {
+        "overhead_fraction": np.where(
+            total_time > 0,
+            1.0 - np.asarray(arrays["useful_work"], np.float64) / safe_total,
+            0.0),
+        "mean_run_duration": total_time
+        / (np.asarray(arrays["n_failures"], np.float64) + 1.0),
+    }
+    out: Dict[str, Stat] = {}
+    for name in _SCALAR_METRICS:
+        if name in arrays:
+            xs = np.asarray(arrays[name], np.float64)
+        elif name in derived:
+            xs = derived[name]
+        else:
+            xs = zeros
+        out[name] = Stat.of(xs)
+    if "completed" in arrays:   # fraction of replicas that finished the
+        # job inside the step budget (CTMC) — parity with timed_out
+        out["completed"] = Stat.of(np.asarray(arrays["completed"],
+                                              np.float64))
+    out["run_duration_pooled"] = Stat.of(derived["mean_run_duration"])
     return out
 
 

@@ -11,6 +11,12 @@ ranges (the paper's evaluation crosses every knob with working_pool_size).
 Results can be dumped as CSV or JSON; a yaml experiment file is supported
 via :func:`load_experiment`.
 
+Engine selection (``engine=`` on every sweep, default ``"auto"``): sweeps
+route through :mod:`repro.core.backend`, which batches every grid point
+that fits the vectorized CTMC engine's envelope into a single compiled
+XLA program and runs the rest through the event-driven engine.  See the
+backend module docstring for the exactness caveats of each engine.
+
 Special virtual parameter ``systematic_failure_rate_multiplier`` sets the
 systematic rate as a multiple of the (possibly swept) random rate, the way
 Table I expresses it.
@@ -25,9 +31,9 @@ import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from .metrics import RunResult, Stat, aggregate
+from .backend import Replications, run_replications_batch
+from .metrics import RunResult, Stat
 from .params import Params
-from .simulation import simulate
 
 #: sweep-table columns (means over replications)
 DEFAULT_STATS = ("total_time", "n_failures", "n_random_failures",
@@ -53,16 +59,29 @@ def _apply_param(params: Params, name: str, value: Any) -> Params:
 @dataclass
 class SweepPoint:
     values: Dict[str, Any]
-    results: List[RunResult]
+    results: List[RunResult]        # per-replication results (event engine)
     stats: Dict[str, Stat]
+    #: replication count (== len(results) on the event engine; the batched
+    #: CTMC path aggregates arrays directly and leaves ``results`` empty)
+    n: Optional[int] = None
+    engine: str = "event"
+
+    @property
+    def n_replications(self) -> int:
+        return self.n if self.n is not None else len(self.results)
 
     def row(self, columns: Sequence[str] = DEFAULT_STATS) -> Dict[str, Any]:
         out: Dict[str, Any] = dict(self.values)
         for c in columns:
             out[c] = self.stats[c].mean
         out["total_time_ci95"] = self.stats["total_time"].ci95_halfwidth(
-            len(self.results))
+            self.n_replications)
         return out
+
+    @classmethod
+    def of(cls, values: Dict[str, Any], rep: Replications) -> "SweepPoint":
+        return cls(values, rep.results, rep.stats, n=rep.n,
+                   engine=rep.engine)
 
 
 @dataclass
@@ -77,8 +96,13 @@ class SweepResult:
     def write_csv(self, path: str, columns: Sequence[str] = DEFAULT_STATS) -> None:
         rows = self.to_rows(columns)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        if rows:
+            fieldnames = list(rows[0].keys())
+        else:  # empty sweep: still emit a well-formed header-only file
+            fieldnames = (list(self.parameter_names) + list(columns)
+                          + ["total_time_ci95"])
         with open(path, "w", newline="") as f:
-            writer = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            writer = csv.DictWriter(f, fieldnames=fieldnames)
             writer.writeheader()
             writer.writerows(rows)
 
@@ -100,24 +124,29 @@ class OneWaySweep:
 
     def __init__(self, title: str, parameter: str, values: Sequence[Any],
                  n_replications: int = 5, base_params: Optional[Params] = None,
-                 base_seed: int = 0):
+                 base_seed: int = 0, engine: str = "auto"):
         self.title = title
         self.parameter = parameter
         self.values = list(values)
         self.n_replications = n_replications
         self.base_params = base_params or Params()
         self.base_seed = base_seed
+        self.engine = engine
 
     def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
-        points = []
-        for i, v in enumerate(self.values):
-            if progress:
-                progress(f"{self.title}: {self.parameter}={v}")
-            p = _apply_param(self.base_params, self.parameter, v)
-            # common random numbers across points: same seed per replication
-            results = simulate(p, self.n_replications, base_seed=self.base_seed)
-            points.append(SweepPoint({self.parameter: v}, results,
-                                     aggregate(results)))
+        grid = [_apply_param(self.base_params, self.parameter, v)
+                for v in self.values]
+        cb = (lambda i: progress(
+            f"{self.title}: {self.parameter}={self.values[i]}")) \
+            if progress else None
+        # common random numbers across points: the event engine reuses
+        # base_seed per replication; the batched CTMC engine tiles one
+        # uniform draw per replica column across all points.
+        reps = run_replications_batch(grid, self.n_replications,
+                                      engine=self.engine,
+                                      base_seed=self.base_seed, progress=cb)
+        points = [SweepPoint.of({self.parameter: v}, rep)
+                  for v, rep in zip(self.values, reps)]
         return SweepResult(self.title, [self.parameter], points)
 
 
@@ -127,43 +156,50 @@ class TwoWaySweep:
     def __init__(self, title: str, parameter_a: str, values_a: Sequence[Any],
                  parameter_b: str, values_b: Sequence[Any],
                  n_replications: int = 5, base_params: Optional[Params] = None,
-                 base_seed: int = 0):
+                 base_seed: int = 0, engine: str = "auto"):
         self.title = title
         self.parameter_a, self.values_a = parameter_a, list(values_a)
         self.parameter_b, self.values_b = parameter_b, list(values_b)
         self.n_replications = n_replications
         self.base_params = base_params or Params()
         self.base_seed = base_seed
+        self.engine = engine
 
     def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
-        points = []
-        for va in self.values_a:
-            for vb in self.values_b:
-                if progress:
-                    progress(f"{self.title}: {self.parameter_a}={va}, "
-                             f"{self.parameter_b}={vb}")
-                p = _apply_param(self.base_params, self.parameter_a, va)
-                p = _apply_param(p, self.parameter_b, vb)
-                results = simulate(p, self.n_replications,
-                                   base_seed=self.base_seed)
-                points.append(SweepPoint(
-                    {self.parameter_a: va, self.parameter_b: vb},
-                    results, aggregate(results)))
+        combos = [(va, vb) for va in self.values_a for vb in self.values_b]
+        grid = [_apply_param(_apply_param(self.base_params,
+                                          self.parameter_a, va),
+                             self.parameter_b, vb)
+                for va, vb in combos]
+        cb = (lambda i: progress(
+            f"{self.title}: {self.parameter_a}={combos[i][0]}, "
+            f"{self.parameter_b}={combos[i][1]}")) if progress else None
+        reps = run_replications_batch(grid, self.n_replications,
+                                      engine=self.engine,
+                                      base_seed=self.base_seed, progress=cb)
+        points = [SweepPoint.of({self.parameter_a: va, self.parameter_b: vb},
+                                rep)
+                  for (va, vb), rep in zip(combos, reps)]
         return SweepResult(self.title,
                            [self.parameter_a, self.parameter_b], points)
 
 
-def load_experiment(path: str) -> List[Any]:
+def load_experiment(path: str, engine: Optional[str] = None) -> List[Any]:
     """Build sweeps from a yaml/json experiment file.
 
     Schema::
 
         base_params: {recovery_time: 20, ...}
         n_replications: 5
+        engine: auto          # optional: auto | event | ctmc
         sweeps:
           - {title: ..., parameter: ..., values: [...]}                    # one-way
           - {title: ..., parameter_a: ..., values_a: [...],
              parameter_b: ..., values_b: [...]}                            # two-way
+
+    ``engine`` (argument or file key; the argument wins) selects the
+    execution engine for every sweep; the default ``auto`` batches all
+    CTMC-compatible points into one compiled program.
     """
     with open(path) as f:
         if path.endswith((".yaml", ".yml")):
@@ -174,15 +210,18 @@ def load_experiment(path: str) -> List[Any]:
     base = Params.from_dict(spec.get("base_params", {})) \
         if spec.get("base_params") else Params()
     n_rep = int(spec.get("n_replications", 5))
+    eng = engine or spec.get("engine", "auto")
     sweeps: List[Any] = []
     for s in spec.get("sweeps", []):
         if "parameter" in s:
             sweeps.append(OneWaySweep(s.get("title", s["parameter"]),
                                       s["parameter"], s["values"],
-                                      n_replications=n_rep, base_params=base))
+                                      n_replications=n_rep, base_params=base,
+                                      engine=eng))
         else:
             sweeps.append(TwoWaySweep(s.get("title", "two-way"),
                                       s["parameter_a"], s["values_a"],
                                       s["parameter_b"], s["values_b"],
-                                      n_replications=n_rep, base_params=base))
+                                      n_replications=n_rep, base_params=base,
+                                      engine=eng))
     return sweeps

@@ -9,7 +9,12 @@ races the exponential clock families against the deterministic timers
 Pallas kernel, then applies the winning transition with masked updates.
 ``lax.scan`` over events x vectorization over replicas turns a whole
 replication study into a single XLA program; parameter sweeps stack one
-level higher (sweeps run one compiled program per point with cached jit).
+level higher: :func:`simulate_ctmc_sweep` flattens a (points x replicas)
+grid into one batch axis (grouping points that share pool structure) so
+an entire sweep is a single compiled program, and the scan runs in
+chunks inside a ``lax.while_loop`` that stops as soon as every replica
+reaches DONE — the ``default_max_steps`` head-room is only paid when a
+trajectory actually needs it.
 
 Compartment classes: c = 2*origin + bad, i.e.
   0: working-origin good   1: working-origin bad
@@ -47,9 +52,9 @@ K_EXP = 16
 
 _METRICS = ("total_time", "n_failures", "n_random_failures",
             "n_systematic_failures", "n_preemptions", "n_auto_repairs",
-            "n_manual_repairs", "n_host_selections", "n_standby_swaps",
-            "n_undiagnosed", "n_misdiagnosed", "stall_time",
-            "recovery_overhead", "lost_work", "useful_work")
+            "n_manual_repairs", "n_failed_repairs", "n_host_selections",
+            "n_standby_swaps", "n_undiagnosed", "n_misdiagnosed",
+            "stall_time", "recovery_overhead", "lost_work", "useful_work")
 
 
 def supports(params: Params) -> bool:
@@ -112,11 +117,17 @@ def _initial_state(p: Params, R: int) -> Dict[str, jnp.ndarray]:
     return state
 
 
-def _pick_class(counts: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
-    """Categorical over 4 classes proportional to counts. (R,4),(R,)->(R,)"""
+def _pick_classes(counts: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Categorical draws proportional to counts: (R, G, 4) x (R, G) -> (R, G).
+
+    One cumsum/reduction pass covers all G per-pool picks of a step —
+    the scan body is op-dispatch-bound on CPU, so fusing the four pool
+    draws keeps step latency down.
+    """
     total = jnp.maximum(counts.sum(-1), 1e-30)
-    cdf = jnp.cumsum(counts, axis=-1) / total[:, None]
-    return jnp.minimum(jnp.sum((u[:, None] >= cdf).astype(jnp.int32), -1), 3)
+    cdf = jnp.cumsum(counts, axis=-1) / total[..., None]
+    return jnp.minimum(
+        jnp.sum((u[..., None] >= cdf).astype(jnp.int32), -1), 3)
 
 
 def _onehot(c: jnp.ndarray) -> jnp.ndarray:
@@ -129,12 +140,29 @@ def _onehot(c: jnp.ndarray) -> jnp.ndarray:
 
 def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
           impl: Optional[str]) -> Dict[str, jnp.ndarray]:
+    R = s["t"].shape[0]
+    u = jax.random.uniform(key_t, (R, 8), minval=1e-12, maxval=1.0)
+    return _step_u(s, u, pv, impl)
+
+
+def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
+            impl: Optional[str]) -> Dict[str, jnp.ndarray]:
+    """One CTMC transition for a batch of replicas.
+
+    ``pv`` is either a single 15-vector shared by the whole batch or a
+    (B, 15) matrix with one parameter row per replica — the layout the
+    batched sweep uses after flattening the (points x replicas) grid.
+    """
+    if pv.ndim == 1:
+        cols = [pv[i] for i in range(15)]
+        _c = lambda x: x            # param vs (B, 4) class arrays
+    else:
+        cols = [pv[:, i] for i in range(15)]
+        _c = lambda x: x[:, None]
     (r_rand, r_sys, recovery, host_sel, waiting, auto_t, man_t,
      auto_fail, man_fail, p_auto, dp, du, ckpt, preempt_cost,
-     warm_standbys) = [pv[i] for i in range(15)]
-    R = s["t"].shape[0]
+     warm_standbys) = cols
 
-    u = jax.random.uniform(key_t, (R, 8), minval=1e-12, maxval=1.0)
     u_time, u_pick, u_diag, u_wrong, u_cls, u_esc, u_succ, u_pool = (
         u[:, 0], u[:, 1], u[:, 2], u[:, 3], u[:, 4], u[:, 5], u[:, 6],
         u[:, 7])
@@ -147,10 +175,10 @@ def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
     # ---- rates (R, 16) ------------------------------------------------
     run = s["run"]
     bad_mask = jnp.asarray([0.0, 1.0, 0.0, 1.0])
-    fail_rand = run * r_rand * computing[:, None]
-    fail_sys = run * bad_mask[None, :] * r_sys * computing[:, None]
-    auto_rate = s["auto"] / jnp.maximum(auto_t, 1e-9)
-    man_rate = s["man"] / jnp.maximum(man_t, 1e-9)
+    fail_rand = run * _c(r_rand) * computing[:, None]
+    fail_sys = run * bad_mask[None, :] * _c(r_sys) * computing[:, None]
+    auto_rate = s["auto"] / jnp.maximum(_c(auto_t), 1e-9)
+    man_rate = s["man"] / jnp.maximum(_c(man_t), 1e-9)
     rates = jnp.concatenate([fail_rand, fail_sys, auto_rate, man_rate],
                             axis=-1) * active[:, None]
 
@@ -207,8 +235,16 @@ def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
     ns["n_undiagnosed"] = s["n_undiagnosed"] \
         + (is_fail & ~diagnosed).astype(jnp.float32)
     ns["n_misdiagnosed"] = s["n_misdiagnosed"] + wrong.astype(jnp.float32)
-    removed_cls = jnp.where(wrong, _pick_class(run, u_cls), cls)
-    rm1h = _onehot(removed_cls) * diagnosed[:, None]
+
+    # one stacked categorical draw for all four pools; rep1h (the one-hot
+    # of the raced class) doubles as the right-diagnosis removal mask
+    picks = _pick_classes(
+        jnp.stack([run, s["sb"], s["fw"], s["fs"]], axis=1),
+        jnp.stack([u_cls, u_cls, u_pool, u_pool], axis=1))     # (R, 4)
+    pick1h = jax.nn.one_hot(picks, 4, dtype=jnp.float32)       # (R, 4, 4)
+    rep1h = _onehot(cls)
+    rm1h = jnp.where(wrong[:, None], pick1h[:, 0], rep1h) \
+        * diagnosed[:, None]
     ns["run"] = ns["run"] - rm1h
     ns["auto"] = ns["auto"] + rm1h
 
@@ -221,15 +257,13 @@ def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
     use_fs = diagnosed & ~use_sb & ~use_fw & (fs_tot > 0)
     goes_stall = diagnosed & ~use_sb & ~use_fw & ~use_fs
 
-    sb_cls = _pick_class(s["sb"], u_cls)
-    fw_cls = _pick_class(s["fw"], u_pool)
-    fs_cls = _pick_class(s["fs"], u_pool)
-    ns["sb"] = ns["sb"] - _onehot(sb_cls) * use_sb[:, None]
-    ns["fw"] = ns["fw"] - _onehot(fw_cls) * use_fw[:, None]
-    ns["fs"] = ns["fs"] - _onehot(fs_cls) * use_fs[:, None]
-    ns["run"] = (ns["run"] + _onehot(sb_cls) * use_sb[:, None]
-                 + _onehot(fw_cls) * use_fw[:, None]
-                 + _onehot(fs_cls) * use_fs[:, None])
+    take = (pick1h[:, 1] * use_sb[:, None]
+            + pick1h[:, 2] * use_fw[:, None]
+            + pick1h[:, 3] * use_fs[:, None])
+    ns["sb"] = ns["sb"] - pick1h[:, 1] * use_sb[:, None]
+    ns["fw"] = ns["fw"] - pick1h[:, 2] * use_fw[:, None]
+    ns["fs"] = ns["fs"] - pick1h[:, 3] * use_fs[:, None]
+    ns["run"] = ns["run"] + take
     ns["n_standby_swaps"] = s["n_standby_swaps"] + use_sb.astype(jnp.float32)
     ns["n_host_selections"] = s["n_host_selections"] \
         + (use_fw | use_fs).astype(jnp.float32)
@@ -247,7 +281,6 @@ def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
         + jnp.where(resolves, recovery, 0.0)
 
     # ---- repair completions ----------------------------------------------
-    rep1h = _onehot(cls)
     ns["auto"] = ns["auto"] - rep1h * is_auto[:, None]
     ns["n_auto_repairs"] = s["n_auto_repairs"] + is_auto.astype(jnp.float32)
     escalate = is_auto & (u_esc >= p_auto)
@@ -258,6 +291,8 @@ def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
     finishes = (is_auto & ~escalate) | is_man
     fail_prob = jnp.where(is_man, man_fail, auto_fail)
     healed = finishes & (u_succ >= fail_prob)
+    ns["n_failed_repairs"] = s["n_failed_repairs"] \
+        + (finishes & ~healed).astype(jnp.float32)
     out_cls = jnp.where(healed, cls - (cls % 2), cls)  # bad -> good
     out1h = _onehot(out_cls)
 
@@ -301,44 +336,160 @@ def default_max_steps(p: Params, safety: float = 2.0) -> int:
     return max(128, int(lam * horizon * 3.2 * safety))
 
 
-@partial(jax.jit, static_argnames=("R", "max_steps", "impl", "struct_key"))
-def _run_compiled(pv: jnp.ndarray, key: jax.Array, R: int, max_steps: int,
-                  impl: Optional[str], struct_key,
-                  init_state: Dict[str, jnp.ndarray]):
-    def body(carry, key_t):
-        return _step(carry, key_t, pv, impl), None
+#: steps simulated per early-exit check (one compiled scan per chunk);
+#: small chunks exit closer to the true max event count — the while-loop
+#: bookkeeping per chunk is noise next to 64 scan steps
+DEFAULT_CHUNK_STEPS = 64
 
-    keys = jax.random.split(key, max_steps)
-    state, _ = jax.lax.scan(body, init_state, keys)
+
+def _struct_key(p: Params):
+    """Hashable key of everything that shapes the *initial state*.
+
+    Points sharing a struct key can be flattened into one batch: only
+    their rate/time/probability parameters differ, and those are traced
+    (per-replica) inputs of the compiled program.
+    """
+    return (p.job_size, p.working_pool_size, p.spare_pool_size,
+            p.warm_standbys, round(p.systematic_failure_fraction, 6),
+            round(p.job_length, 3), round(p.host_selection_time, 3))
+
+
+@partial(jax.jit, static_argnames=("P", "R", "chunk", "n_chunks", "rem",
+                                   "impl", "early_exit", "struct_key"))
+def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
+                 chunk: int, n_chunks: int, rem: int, impl: Optional[str],
+                 early_exit: bool, struct_key,
+                 init_state: Dict[str, jnp.ndarray]):
+    """Chunked scan with early exit; batch axis is B = P * R (point-major).
+
+    Runs exactly ``n_chunks * chunk + rem`` steps (minus chunks skipped
+    by early exit).  Uniforms are drawn per *replica column* (R, 8) and
+    tiled across the P points, so every sweep point sees common random
+    numbers — the batched analogue of the event engine's
+    same-seed-per-replication policy.
+    """
+    def scan_body(state, u):
+        if P > 1:
+            u = jnp.tile(u, (P, 1))
+        return _step_u(state, u, pv, impl), None
+
+    def run_chunk(state, i, n_steps):
+        # one batched threefry call per chunk (a per-step split + draw is
+        # the dominant scan cost on CPU)
+        us = jax.random.uniform(jax.random.fold_in(key, i), (n_steps, R, 8),
+                                minval=1e-12, maxval=1.0)
+        state, _ = jax.lax.scan(scan_body, state, us)
+        return state
+
+    def chunk_body(carry):
+        i, state = carry
+        return i + 1, run_chunk(state, i, chunk)
+
+    def cond(carry):
+        i, state = carry
+        not_done = i < n_chunks
+        if early_exit:
+            not_done &= jnp.any(state["phase"] != DONE)
+        return not_done
+
+    _, state = jax.lax.while_loop(cond, chunk_body,
+                                  (jnp.int32(0), init_state))
+    if rem:
+        # partial final chunk so an explicit max_steps is honored exactly.
+        # Finished replicas are inert, so under early_exit skipping the
+        # remainder once everything is DONE is bit-identical and free.
+        def do_rem(s):
+            return run_chunk(s, n_chunks, rem)
+
+        if early_exit:
+            state = jax.lax.cond(jnp.any(state["phase"] != DONE),
+                                 do_rem, lambda s: s, state)
+        else:
+            state = do_rem(state)
     state["completed"] = (state["phase"] == DONE).astype(jnp.float32)
     state["total_time"] = jnp.where(state["phase"] == DONE,
                                     state["total_time"], state["t"])
     return state
 
 
+def _unsupported_error() -> ValueError:
+    return ValueError(
+        "CTMC engine supports the default exponential AIReSim model "
+        "(no retirement / regeneration / non-exponential "
+        "distributions); use core.simulation.simulate instead")
+
+
+def _extract(state, sl=slice(None)) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(v[sl]) for k, v in state.items()
+            if k in _METRICS + ("completed",)}
+
+
 def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
                   max_steps: Optional[int] = None,
-                  impl: Optional[str] = None) -> Dict[str, np.ndarray]:
+                  impl: Optional[str] = None,
+                  chunk_steps: Optional[int] = None,
+                  early_exit: bool = True) -> Dict[str, np.ndarray]:
     """Vectorized replication study. Returns {metric: np.ndarray (R,)}.
 
-    jit-compiled once per (pool-structure, R, max_steps); parameter values
-    are traced inputs, so sweeps over rates/times/probabilities reuse the
-    compiled program.
+    jit-compiled once per (pool-structure, R, step-budget); parameter
+    values are traced inputs, so repeated calls over rates/times/
+    probabilities reuse the compiled program.  The scan runs in
+    ``chunk_steps``-sized pieces and stops at the first chunk boundary
+    where every replica is DONE; ``early_exit=False`` forces the full
+    ``max_steps`` budget (bit-identical results — finished replicas are
+    inert — which tests/test_backend.py asserts).
     """
     if not supports(params):
-        raise ValueError(
-            "CTMC engine supports the default exponential AIReSim model "
-            "(no retirement / regeneration / non-exponential "
-            "distributions); use core.simulation.simulate instead")
+        raise _unsupported_error()
     params.validate()
     max_steps = max_steps or default_max_steps(params)
-    struct_key = (params.job_size, params.working_pool_size,
-                  params.spare_pool_size, params.warm_standbys,
-                  round(params.systematic_failure_fraction, 6),
-                  round(params.job_length, 3),
-                  round(params.host_selection_time, 3))
+    chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, max_steps)
     init_state = _initial_state(params, n_replicas)
-    out = _run_compiled(_params_vector(params), jax.random.PRNGKey(seed),
-                        n_replicas, max_steps, impl, struct_key, init_state)
-    return {k: np.asarray(v) for k, v in out.items()
-            if k in _METRICS + ("completed",)}
+    out = _run_chunked(_params_vector(params), jax.random.PRNGKey(seed),
+                       1, n_replicas, chunk, max_steps // chunk,
+                       max_steps % chunk, impl, early_exit,
+                       _struct_key(params), init_state)
+    return _extract(out)
+
+
+def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
+                        max_steps: Optional[int] = None,
+                        impl: Optional[str] = None,
+                        chunk_steps: Optional[int] = None,
+                        early_exit: bool = True):
+    """Batched sweep: one compiled program per pool *structure*, not per point.
+
+    ``params_list`` is a sequence of :class:`Params` (the sweep grid, any
+    order).  Points are grouped by :func:`_struct_key`; each group's
+    parameter vectors are stacked into a (P, 15) array, expanded to one
+    row per replica, and the whole (P * R,) batch runs through the same
+    chunked scan as :func:`simulate_ctmc` — the ``event_race`` kernel
+    sees a single flat batch axis, so Pallas block sizes stay aligned.
+
+    Returns a list of ``{metric: np.ndarray (R,)}`` dicts in input order.
+    """
+    params_list = list(params_list)
+    for p in params_list:
+        if not supports(p):
+            raise _unsupported_error()
+        p.validate()
+
+    groups: Dict[tuple, list] = {}
+    for i, p in enumerate(params_list):
+        groups.setdefault(_struct_key(p), []).append(i)
+
+    results: list = [None] * len(params_list)
+    for skey, idxs in groups.items():
+        pts = [params_list[i] for i in idxs]
+        P, R = len(pts), n_replicas
+        steps = max_steps or max(default_max_steps(p) for p in pts)
+        chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, steps)
+        pv = jnp.stack([_params_vector(p) for p in pts])        # (P, 15)
+        pv_flat = jnp.repeat(pv, R, axis=0)                     # (P*R, 15)
+        init_state = _initial_state(pts[0], P * R)
+        out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P, R,
+                           chunk, steps // chunk, steps % chunk, impl,
+                           early_exit, skey, init_state)
+        for j, i in enumerate(idxs):
+            results[i] = _extract(out, slice(j * R, (j + 1) * R))
+    return results

@@ -4,6 +4,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep; skip module cleanly
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (MINUTES_PER_DAY, ClusterSimulation, Params,
