@@ -86,6 +86,24 @@ def sweep_bench_params() -> Params:
                   random_failure_rate=0.25 / MINUTES_PER_DAY, seed=0)
 
 
+def _agreement_points(ct_points, ev_points, key: str) -> list:
+    """Per-point CTMC-vs-event agreement of total_time means, in
+    pooled-standard-error units."""
+    points = []
+    for pc, pe in zip(ct_points, ev_points):
+        sc, se_ = pc.stats["total_time"], pe.stats["total_time"]
+        pooled_se = np.sqrt(sc.std ** 2 / pc.n_replications
+                            + se_.std ** 2 / pe.n_replications)
+        points.append({
+            key: pc.values[key],
+            "ctmc_total_time_mean": sc.mean,
+            "event_total_time_mean": se_.mean,
+            "pooled_se": float(pooled_se),
+            "z": float((sc.mean - se_.mean) / max(pooled_se, 1e-9)),
+        })
+    return points
+
+
 def sweep_throughput(n_points: int = 8, n_replicas: int = 256,
                      ) -> Dict[str, object]:
     """Grid-sweep wall clock: batched CTMC engine vs the event-driven loop.
@@ -115,18 +133,7 @@ def sweep_throughput(n_points: int = 8, n_replicas: int = 256,
     ev = event_sweep.run()
     event_s = time.perf_counter() - t0
 
-    points = []
-    for pc, pe in zip(ct.points, ev.points):
-        sc, se_ = pc.stats["total_time"], pe.stats["total_time"]
-        pooled_se = np.sqrt(sc.std ** 2 / pc.n_replications
-                            + se_.std ** 2 / pe.n_replications)
-        points.append({
-            "recovery_time": pc.values["recovery_time"],
-            "ctmc_total_time_mean": sc.mean,
-            "event_total_time_mean": se_.mean,
-            "pooled_se": float(pooled_se),
-            "z": float((sc.mean - se_.mean) / max(pooled_se, 1e-9)),
-        })
+    points = _agreement_points(ct.points, ev.points, "recovery_time")
     return {
         "n_points": n_points,
         "n_replicas": n_replicas,
@@ -138,6 +145,110 @@ def sweep_throughput(n_points: int = 8, n_replicas: int = 256,
         "max_abs_z": max(abs(p["z"]) for p in points),
         "points": points,
     }
+
+
+def structural_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
+                                ) -> Dict[str, object]:
+    """Structural-grid wall clock: padded vs per-structure vs event engine.
+
+    Sweeps ``job_size`` so every grid point is a *distinct pool
+    structure*.  Before structure padding each point compiled its own XLA
+    program; the padded path runs the whole grid as one flat batch with a
+    single compilation.  Reports cold (compile-inclusive) and warm wall
+    clock for both CTMC modes, the observed compile counts, the event
+    engine baseline, and per-point padded-vs-event agreement in
+    pooled-standard-error units.
+    """
+    from repro.core import vectorized
+    from repro.core.vectorized import _struct_key
+
+    base = sweep_bench_params()
+    values = [384 + 16 * i for i in range(n_points)]
+    kw = dict(n_replications=n_replicas, base_params=base, base_seed=0)
+    grid = [base.replace(job_size=v) for v in values]
+    assert len({_struct_key(p) for p in grid}) == n_points, \
+        "benchmark grid must be fully structural"
+
+    def timed_ctmc(padded):
+        sw = OneWaySweep("structural-bench", "job_size", values,
+                         engine="ctmc", padded=padded, **kw)
+        c0 = vectorized.compile_cache_size()
+        t0 = time.perf_counter()
+        res = sw.run()
+        cold = time.perf_counter() - t0
+        c1 = vectorized.compile_cache_size()
+        compiles = None if c0 is None else c1 - c0
+        t0 = time.perf_counter()
+        res = sw.run()
+        warm = time.perf_counter() - t0
+        return res, cold, warm, compiles
+
+    ct, padded_cold_s, padded_warm_s, padded_compiles = timed_ctmc(True)
+    _, per_struct_cold_s, per_struct_warm_s, per_struct_compiles = \
+        timed_ctmc(False)
+
+    t0 = time.perf_counter()
+    ev = OneWaySweep("structural-bench", "job_size", values,
+                     engine="event", **kw).run()
+    event_s = time.perf_counter() - t0
+
+    points = _agreement_points(ct.points, ev.points, "job_size")
+    return {
+        "n_points": n_points,
+        "n_replicas": n_replicas,
+        "event_wall_s": event_s,
+        "padded_wall_s": padded_cold_s,
+        "padded_warm_wall_s": padded_warm_s,
+        "padded_compiles": padded_compiles,
+        "per_structure_wall_s": per_struct_cold_s,
+        "per_structure_warm_wall_s": per_struct_warm_s,
+        "per_structure_compiles": per_struct_compiles,
+        "padded_vs_per_structure_x": per_struct_cold_s / padded_cold_s,
+        "padded_vs_per_structure_warm_x": per_struct_warm_s / padded_warm_s,
+        "padded_vs_event_x": event_s / padded_cold_s,
+        "max_abs_z": max(abs(p["z"]) for p in points),
+        "points": points,
+    }
+
+
+def structural_smoke(n_points: int = 4, n_replicas: int = 32,
+                     ) -> Dict[str, object]:
+    """Tiny structural sweep guarding the compile-count invariant.
+
+    Run by scripts/ci.sh on every tier-1 pass: a mixed-structure
+    ``job_size`` grid must compile exactly one XLA program per padded
+    group (= one for the whole grid).  Exits nonzero on regression.
+    """
+    from repro.core import vectorized
+
+    base = Params(job_size=16, working_pool_size=32, spare_pool_size=4,
+                  warm_standbys=2, job_length=0.1 * MINUTES_PER_DAY,
+                  random_failure_rate=2.0 / MINUTES_PER_DAY,
+                  recovery_time=5.0, auto_repair_time=30.0,
+                  manual_repair_time=60.0, seed=0)
+    values = [8 + 4 * i for i in range(n_points)]
+    sweep = OneWaySweep("structural-smoke", "job_size", values,
+                        n_replications=n_replicas, base_params=base,
+                        engine="ctmc")
+    c0 = vectorized.compile_cache_size()
+    t0 = time.perf_counter()
+    res = sweep.run()
+    wall = time.perf_counter() - t0
+    c1 = vectorized.compile_cache_size()
+    compiles = None if c0 is None else c1 - c0
+    out = {"n_points": n_points, "n_replicas": n_replicas,
+           "wall_s": wall, "compiles": compiles,
+           "total_time_means": [p.stats["total_time"].mean
+                                for p in res.points]}
+    if compiles is None:
+        out["note"] = ("jit cache introspection unavailable on this jax; "
+                       "compile-count guard skipped")
+    elif compiles != 1:
+        raise SystemExit(
+            f"compile-count regression: structural {n_points}-point sweep "
+            f"compiled {compiles} XLA programs, expected exactly 1 per "
+            "padded group")
+    return out
 
 
 def speedup_summary() -> Dict[str, float]:
@@ -167,10 +278,17 @@ def write_sweep_artifact(sw: Dict[str, object],
     return path
 
 
-if __name__ == "__main__":   # quick standalone: just the sweep benchmark
+if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
     import json
+    import sys
 
+    if "--smoke" in sys.argv:
+        print(json.dumps(structural_smoke(), indent=2))
+        sys.exit(0)
     sw = sweep_throughput()
-    print(json.dumps({k: v for k, v in sw.items() if k != "points"},
-                     indent=2))
+    sw["structural"] = structural_sweep_throughput()
+    print(json.dumps({k: v for k, v in sw.items()
+                      if k not in ("points", "structural")}, indent=2))
+    print(json.dumps({k: v for k, v in sw["structural"].items()
+                      if k != "points"}, indent=2))
     print("wrote", write_sweep_artifact(sw))

@@ -67,9 +67,9 @@ def two_way_sweep(param: str, values: Sequence[float],
             else:
                 p = paper_params(working_pool_size=pool, **{param: v})
             grid.append((v, pool, p))
-    # one batched call: points sharing a pool structure (here: all values
-    # of a non-structural param at the same pool size) run as one compiled
-    # program instead of len(values) separate ones
+    # one batched call: with structure padding the whole values x pools
+    # cross grid — pool size is a structural knob — runs as a single
+    # compiled program instead of one per pool structure
     outs = simulate_ctmc_sweep([p for _, _, p in grid], n_replicas=n_replicas,
                                seed=0)
     return [{param: v, "working_pool_size": pool, **_cell_stats(out, n_replicas)}

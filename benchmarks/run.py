@@ -83,6 +83,17 @@ def main() -> None:
          f"batched ctmc {sw['speedup_x']:.1f}x faster than event loop "
          f"({sw['event_wall_s']:.1f}s -> {sw['ctmc_wall_s']:.2f}s, "
          f"max |z| {sw['max_abs_z']:.2f})")
+
+    t0 = time.perf_counter()
+    st = engine_perf.structural_sweep_throughput(
+        n_points=8, n_replicas=64 if FAST else 256)
+    _row("engine_structural_sweep", (time.perf_counter() - t0) * 1e6,
+         f"padded {st['padded_compiles']} compile vs per-structure "
+         f"{st['per_structure_compiles']}: "
+         f"{st['padded_vs_per_structure_x']:.1f}x cold / "
+         f"{st['padded_vs_per_structure_warm_x']:.1f}x warm, "
+         f"max |z| {st['max_abs_z']:.2f}")
+    sw["structural"] = st
     engine_perf.write_sweep_artifact(sw)
 
     # roofline table from the dry-run artifact

@@ -2,14 +2,19 @@
 # Tier-1 verification in one command (what the roadmap calls "tier-1
 # verify"), plus the machine-readable sweep-performance artifact.
 #
-#   scripts/ci.sh           # tests only
-#   scripts/ci.sh --bench   # tests + sweep benchmark -> BENCH_sweep.json
+#   scripts/ci.sh           # tests + structural-sweep compile smoke
+#   scripts/ci.sh --bench   # also: full sweep benchmarks -> BENCH_sweep.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
+
+# structural-sweep benchmark in smoke mode: a tiny mixed-structure grid
+# must compile exactly one XLA program per padded group; exits nonzero
+# on a compile-count regression.
+python benchmarks/engine_perf.py --smoke
 
 if [[ "${1:-}" == "--bench" ]]; then
     python benchmarks/engine_perf.py

@@ -8,8 +8,12 @@ AIReSim has two engines with one statistical contract:
   * ``ctmc``  — the vectorized JAX engine (:mod:`repro.core.vectorized`).
     Exact only for the paper's default exponential model (see
     ``vectorized.supports``), but simulates thousands of replicas — and,
-    via :func:`run_replications_batch`, whole sweep grids — as a single
-    compiled XLA program.
+    via :func:`run_replications_batch`, whole sweep grids, including
+    *structural* grids over job_size / pool sizes / warm_standbys — as a
+    single compiled XLA program (structure padding; see the vectorized
+    module docstring).  Run-duration statistics are exact on both
+    engines: the CTMC scan records per-run intervals in a ring buffer
+    sized by ``Params.max_run_records``.
 
 ``engine="auto"`` (the default everywhere) picks ``ctmc`` whenever the
 parameters are inside its supported envelope and silently falls back to
@@ -98,13 +102,16 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
                            impl: Optional[str] = None,
                            max_steps: Optional[int] = None,
                            progress: Optional[Callable[[int], None]] = None,
+                           padded: bool = True,
                            ) -> List[Replications]:
     """Replication studies for a whole sweep grid, batched where possible.
 
     Every point that resolves to the CTMC engine is executed in a single
-    ``vectorized.simulate_ctmc_sweep`` call (one compiled program per
-    pool structure); the rest run through the event engine one by one.
-    Results come back in input order regardless of routing.
+    ``vectorized.simulate_ctmc_sweep`` call — with ``padded=True`` (the
+    default) even a mixed-structure grid compiles exactly one XLA
+    program; ``padded=False`` keeps the legacy one-program-per-structure
+    grouping for A/B benchmarks.  The rest run through the event engine
+    one by one.  Results come back in input order regardless of routing.
 
     ``progress(i)`` is invoked when work on grid point ``i`` starts:
     once per point as the sequential event engine reaches it, and for
@@ -123,7 +130,7 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
                 else base_seed)
         arrays_list = vectorized.simulate_ctmc_sweep(
             [params_list[i] for i in ctmc_idx], n_replicas=n, seed=seed,
-            impl=impl, max_steps=max_steps)
+            impl=impl, max_steps=max_steps, padded=padded)
         for i, arrays in zip(ctmc_idx, arrays_list):
             out[i] = _from_arrays(arrays, n)
 

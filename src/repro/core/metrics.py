@@ -113,11 +113,13 @@ def aggregate(results: Sequence[RunResult]) -> Dict[str, Stat]:
         out[name] = Stat.of([float(getattr(r, name)) for r in results])
     out["completed"] = Stat.of([0.0 if r.timed_out else 1.0
                                 for r in results])
-    # run durations pooled across replications
+    # run durations pooled across replications; the event engine keeps
+    # full per-run lists, so nothing is ever truncated on this path
     pooled: List[float] = []
     for r in results:
         pooled.extend(r.run_durations)
     out["run_duration_pooled"] = Stat.of(pooled)
+    out["run_duration_truncated"] = Stat.of([0.0] * len(results))
     return out
 
 
@@ -132,11 +134,20 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, Stat]:
     metrics are computed from the raw arrays:
 
       * ``overhead_fraction``  = 1 - useful_work / total_time
-      * ``mean_run_duration``  ~ total_time / (n_failures + 1) — the
-        event engine records exact durations between restarts; compartment
-        counts cannot, so this is the per-replica average interval.
+      * ``mean_run_duration``  — exact: the engine's per-run records
+        satisfy sum(records) = useful_work + lost_work - cur_run, so the
+        per-replica mean interval is that sum over ``n_runs`` even when
+        the ring buffer overwrote old records.
 
-    ``run_duration_pooled`` pools those per-replica averages.
+    ``run_duration_pooled`` pools every surviving recorded interval from
+    the ``run_durations`` (R, max_runs) ring buffers — the same pooling
+    the event engine applies to its per-run lists — and
+    ``run_duration_truncated`` counts the records the cap overwrote
+    (raise ``Params.max_run_records`` to keep them).
+
+    Legacy fallback: arrays lacking the run-duration records (foreign
+    producers) degrade to the old total_time/(n_failures+1)
+    approximation for both run-duration statistics.
     """
     some = next(iter(arrays.values()))
     R = len(some)
@@ -148,9 +159,29 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, Stat]:
             total_time > 0,
             1.0 - np.asarray(arrays["useful_work"], np.float64) / safe_total,
             0.0),
-        "mean_run_duration": total_time
-        / (np.asarray(arrays["n_failures"], np.float64) + 1.0),
     }
+    exact = "run_durations" in arrays and "n_runs" in arrays
+    if exact:
+        buf = np.asarray(arrays["run_durations"], np.float64)
+        n_runs = np.asarray(arrays["n_runs"], np.int64)
+        max_runs = buf.shape[1]
+        n_valid = np.minimum(n_runs, max_runs)
+        valid = np.arange(max_runs)[None, :] < n_valid[:, None]
+        recorded_total = (
+            np.asarray(arrays["useful_work"], np.float64)
+            + np.asarray(arrays.get("lost_work", zeros), np.float64)
+            - np.asarray(arrays.get("cur_run", zeros), np.float64))
+        derived["mean_run_duration"] = np.where(
+            n_runs > 0, recorded_total / np.maximum(n_runs, 1), 0.0)
+        # max_runs=0 means recording was compiled out: pool the (still
+        # exact) per-replica means instead of individual intervals
+        pooled = buf[valid] if max_runs else derived["mean_run_duration"]
+        truncated = (n_runs - n_valid).astype(np.float64)
+    else:
+        derived["mean_run_duration"] = total_time / (
+            np.asarray(arrays["n_failures"], np.float64) + 1.0)
+        pooled = derived["mean_run_duration"]
+        truncated = zeros
     out: Dict[str, Stat] = {}
     for name in _SCALAR_METRICS:
         if name in arrays:
@@ -164,7 +195,8 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, Stat]:
         # job inside the step budget (CTMC) — parity with timed_out
         out["completed"] = Stat.of(np.asarray(arrays["completed"],
                                               np.float64))
-    out["run_duration_pooled"] = Stat.of(derived["mean_run_duration"])
+    out["run_duration_pooled"] = Stat.of(pooled)
+    out["run_duration_truncated"] = Stat.of(truncated)
     return out
 
 

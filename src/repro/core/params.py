@@ -82,6 +82,13 @@ class Params:
     # ---- experiment control ---------------------------------------------------
     seed: int = 0
     max_sim_time: float = 10_000 * MINUTES_PER_DAY  # hard stop (deadlock guard)
+    #: ring-buffer slots for exact per-run duration records in the
+    #: vectorized CTMC engine (per replica).  Runs beyond the cap
+    #: overwrite the oldest slot and surface as the
+    #: ``run_duration_truncated`` statistic; per-replica means stay exact
+    #: regardless.  The event engine keeps full Python lists and ignores
+    #: this.
+    max_run_records: int = 128
 
     # -------------------------------------------------------------------------
     def validate(self) -> None:
@@ -107,6 +114,8 @@ class Params:
                      "waiting_time", "auto_repair_time", "manual_repair_time"):
             if getattr(self, name) < 0:
                 raise ValueError(f"{name} must be non-negative")
+        if self.max_run_records < 1:
+            raise ValueError("max_run_records must be >= 1")
 
     def replace(self, **kwargs) -> "Params":
         return dataclasses.replace(self, **kwargs)

@@ -14,8 +14,12 @@ via :func:`load_experiment`.
 Engine selection (``engine=`` on every sweep, default ``"auto"``): sweeps
 route through :mod:`repro.core.backend`, which batches every grid point
 that fits the vectorized CTMC engine's envelope into a single compiled
-XLA program and runs the rest through the event-driven engine.  See the
-backend module docstring for the exactness caveats of each engine.
+XLA program and runs the rest through the event-driven engine.  Thanks
+to structure padding this includes *structural* sweeps (job_size, pool
+sizes, warm_standbys, ...): a mixed-structure grid still compiles once
+(``padded=False`` opts back into per-structure compilation for A/B
+measurements).  See the backend module docstring for the exactness
+caveats of each engine.
 
 Special virtual parameter ``systematic_failure_rate_multiplier`` sets the
 systematic rate as a multiple of the (possibly swept) random rate, the way
@@ -124,7 +128,8 @@ class OneWaySweep:
 
     def __init__(self, title: str, parameter: str, values: Sequence[Any],
                  n_replications: int = 5, base_params: Optional[Params] = None,
-                 base_seed: int = 0, engine: str = "auto"):
+                 base_seed: int = 0, engine: str = "auto",
+                 padded: bool = True):
         self.title = title
         self.parameter = parameter
         self.values = list(values)
@@ -132,6 +137,7 @@ class OneWaySweep:
         self.base_params = base_params or Params()
         self.base_seed = base_seed
         self.engine = engine
+        self.padded = padded
 
     def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
         grid = [_apply_param(self.base_params, self.parameter, v)
@@ -144,7 +150,8 @@ class OneWaySweep:
         # uniform draw per replica column across all points.
         reps = run_replications_batch(grid, self.n_replications,
                                       engine=self.engine,
-                                      base_seed=self.base_seed, progress=cb)
+                                      base_seed=self.base_seed, progress=cb,
+                                      padded=self.padded)
         points = [SweepPoint.of({self.parameter: v}, rep)
                   for v, rep in zip(self.values, reps)]
         return SweepResult(self.title, [self.parameter], points)
@@ -156,7 +163,8 @@ class TwoWaySweep:
     def __init__(self, title: str, parameter_a: str, values_a: Sequence[Any],
                  parameter_b: str, values_b: Sequence[Any],
                  n_replications: int = 5, base_params: Optional[Params] = None,
-                 base_seed: int = 0, engine: str = "auto"):
+                 base_seed: int = 0, engine: str = "auto",
+                 padded: bool = True):
         self.title = title
         self.parameter_a, self.values_a = parameter_a, list(values_a)
         self.parameter_b, self.values_b = parameter_b, list(values_b)
@@ -164,6 +172,7 @@ class TwoWaySweep:
         self.base_params = base_params or Params()
         self.base_seed = base_seed
         self.engine = engine
+        self.padded = padded
 
     def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
         combos = [(va, vb) for va in self.values_a for vb in self.values_b]
@@ -176,7 +185,8 @@ class TwoWaySweep:
             f"{self.parameter_b}={combos[i][1]}")) if progress else None
         reps = run_replications_batch(grid, self.n_replications,
                                       engine=self.engine,
-                                      base_seed=self.base_seed, progress=cb)
+                                      base_seed=self.base_seed, progress=cb,
+                                      padded=self.padded)
         points = [SweepPoint.of({self.parameter_a: va, self.parameter_b: vb},
                                 rep)
                   for (va, vb), rep in zip(combos, reps)]

@@ -10,11 +10,28 @@ Pallas kernel, then applies the winning transition with masked updates.
 ``lax.scan`` over events x vectorization over replicas turns a whole
 replication study into a single XLA program; parameter sweeps stack one
 level higher: :func:`simulate_ctmc_sweep` flattens a (points x replicas)
-grid into one batch axis (grouping points that share pool structure) so
-an entire sweep is a single compiled program, and the scan runs in
-chunks inside a ``lax.while_loop`` that stops as soon as every replica
-reaches DONE — the ``default_max_steps`` head-room is only paid when a
-trajectory actually needs it.
+grid into one batch axis so an entire sweep — including *structural*
+sweeps over job_size / pool sizes / warm_standbys — is a single compiled
+program, and the scan runs in chunks inside a ``lax.while_loop`` that
+stops as soon as every replica reaches DONE — the ``default_max_steps``
+head-room is only paid when a trajectory actually needs it.
+
+Structure padding: every point shares one compartment layout (4 classes
+x 4 pools + the two repair shops), so differing pool structures differ
+only in the *initial occupancy values*, which are traced inputs.  A
+point with smaller pools leaves the surplus compartments at zero
+occupancy; zero-count compartments contribute zero rates and are inert
+in the event race.  ``simulate_ctmc_sweep(padded=True)`` (the default)
+exploits this to run a mixed-structure grid as one flat ``(P*R,)`` batch
+with exactly one XLA compilation; ``padded=False`` keeps the legacy
+one-program-per-:func:`_struct_key` grouping for A/B benchmarking.
+
+Exact run durations: the scan carries a per-replica ring buffer of the
+last ``max_runs`` failure-to-failure useful-compute intervals (the event
+engine's ``run_durations``), plus the total attempt count and the
+in-flight interval, so ``metrics.aggregate_arrays`` reports
+``run_duration_pooled`` / ``mean_run_duration`` exactly instead of the
+former total_time/(n_failures+1) approximation.
 
 Compartment classes: c = 2*origin + bad, i.e.
   0: working-origin good   1: working-origin bad
@@ -98,23 +115,51 @@ def _initial_counts(p: Params):
     }
 
 
-def _initial_state(p: Params, R: int) -> Dict[str, jnp.ndarray]:
-    counts = _initial_counts(p)
+def _initial_state_batch(pts, R: int, max_runs: int) -> Dict[str, jnp.ndarray]:
+    """Padded initial state for a structural grid, point-major (P*R, ...).
 
-    def tile(vals):
-        return jnp.tile(jnp.asarray(vals, jnp.float32)[None, :], (R, 1))
+    All points share one compartment layout, so structural parameters
+    (job_size, pool sizes, warm_standbys, systematic fraction, job_length,
+    host-selection offset) enter purely as per-point initial *values*:
+    compartments a small point does not populate sit at zero occupancy and
+    therefore carry zero rates — inert in the event race.  That padding is
+    what lets one compiled program cover every structure in the grid.
+    """
+    P = len(pts)
+    B = P * R
+    counts = [_initial_counts(p) for p in pts]
 
-    state = {k: tile(v) for k, v in counts.items()}
-    state["auto"] = tile([0, 0, 0, 0])
-    state["man"] = tile([0, 0, 0, 0])
-    state["t"] = jnp.full((R,), p.host_selection_time, jnp.float32)
-    state["work_left"] = jnp.full((R,), p.job_length, jnp.float32)
-    state["timer"] = jnp.full((R,), jnp.inf, jnp.float32)
-    state["stall_start"] = jnp.zeros((R,), jnp.float32)
-    state["phase"] = jnp.full((R,), COMPUTE, jnp.int32)
+    def tile(key):
+        arr = np.asarray([c[key] for c in counts], np.float32)   # (P, 4)
+        return jnp.asarray(np.repeat(arr, R, axis=0))            # (P*R, 4)
+
+    def per_point(vals):
+        return jnp.asarray(np.repeat(np.asarray(vals, np.float32), R))
+
+    state = {k: tile(k) for k in ("run", "sb", "fw", "fs")}
+    state["auto"] = jnp.zeros((B, 4), jnp.float32)
+    state["man"] = jnp.zeros((B, 4), jnp.float32)
+    state["t"] = per_point([p.host_selection_time for p in pts])
+    state["work_left"] = per_point([p.job_length for p in pts])
+    state["timer"] = jnp.full((B,), jnp.inf, jnp.float32)
+    state["stall_start"] = jnp.zeros((B,), jnp.float32)
+    state["phase"] = jnp.full((B,), COMPUTE, jnp.int32)
+    state["cur_run"] = jnp.zeros((B,), jnp.float32)
+    state["n_runs"] = jnp.zeros((B,), jnp.int32)
+    state["run_durations"] = jnp.zeros((B, max_runs), jnp.float32)
     for m in _METRICS:
-        state[m] = jnp.zeros((R,), jnp.float32)
+        state[m] = jnp.zeros((B,), jnp.float32)
     return state
+
+
+def _initial_state(p: Params, R: int,
+                   max_runs: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    return _initial_state_batch(
+        [p], R, _max_runs_for([p]) if max_runs is None else max_runs)
+
+
+def _max_runs_for(pts) -> int:
+    return max(p.max_run_records for p in pts)
 
 
 def _pick_classes(counts: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
@@ -221,6 +266,27 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     ns["phase"] = jnp.where(is_timer, COMPUTE, ns["phase"])
     ns["timer"] = jnp.where(is_timer, jnp.inf, timer_dec)
     ns["total_time"] = jnp.where(is_complete, ns["t"], s["total_time"])
+
+    # ---- exact run durations -------------------------------------------
+    # a "run" is one useful-compute interval between restarts (start or
+    # post-failure restart -> next failure or job completion), matching
+    # the event engine's RunResult.run_durations (gross of checkpoint
+    # rollback).  Repair completions during COMPUTE do not end a run.
+    # Records land in a fixed ring buffer: slot n_runs % max_runs, so
+    # overflow overwrites the oldest record; the overwrite count surfaces
+    # downstream as the run_duration_truncated stat, and per-replica
+    # means stay exact via sum(records) = useful + lost - cur_run.
+    record = is_fail | is_complete
+    run_val = s["cur_run"] + progress
+    max_runs = s["run_durations"].shape[1]
+    if max_runs:    # static shape: max_runs=0 compiles the buffer out
+        rows = jnp.arange(run_val.shape[0])
+        slot = jnp.mod(s["n_runs"], max_runs)
+        kept = s["run_durations"][rows, slot]
+        ns["run_durations"] = s["run_durations"].at[rows, slot].set(
+            jnp.where(record, run_val, kept))
+    ns["n_runs"] = s["n_runs"] + record.astype(jnp.int32)
+    ns["cur_run"] = jnp.where(record, 0.0, run_val)
 
     # ---- failure handling ---------------------------------------------------
     f = is_fail.astype(jnp.float32)
@@ -343,11 +409,14 @@ DEFAULT_CHUNK_STEPS = 64
 
 
 def _struct_key(p: Params):
-    """Hashable key of everything that shapes the *initial state*.
+    """Hashable identity of a point's pool *structure*.
 
-    Points sharing a struct key can be flattened into one batch: only
-    their rate/time/probability parameters differ, and those are traced
-    (per-replica) inputs of the compiled program.
+    With structure padding the compiled program no longer depends on any
+    of this — initial occupancies are traced inputs — so the padded sweep
+    path ignores it (``struct_key=None`` -> one compile).  It remains the
+    grouping key of the legacy ``padded=False`` path, where it is passed
+    as a static jit argument precisely to force one XLA program per
+    structure (the behavior the structural-sweep benchmark A/Bs against).
     """
     return (p.job_size, p.working_pool_size, p.spare_pool_size,
             p.warm_standbys, round(p.systematic_failure_fraction, 6),
@@ -412,6 +481,20 @@ def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
     return state
 
 
+def compile_cache_size() -> Optional[int]:
+    """Compiled-program cache entries of the chunked-scan driver.
+
+    One entry per distinct static signature = one XLA compilation; the
+    structural-sweep smoke (scripts/ci.sh) and benchmarks diff this
+    around a sweep to assert the padded path's one-compile invariant.
+    Relies on jax's private ``PjitFunction._cache_size``; returns None
+    when a jax upgrade removes that internal — callers must treat None
+    as "cannot measure", not as a regression.
+    """
+    fn = getattr(_run_chunked, "_cache_size", None)
+    return fn() if callable(fn) else None
+
+
 def _unsupported_error() -> ValueError:
     return ValueError(
         "CTMC engine supports the default exponential AIReSim model "
@@ -419,16 +502,22 @@ def _unsupported_error() -> ValueError:
         "distributions); use core.simulation.simulate instead")
 
 
+#: non-_METRICS outputs worth returning: completion flag + the exact
+#: run-duration records (ring buffer, attempt count, in-flight interval)
+_EXTRA_OUTPUTS = ("completed", "run_durations", "n_runs", "cur_run")
+
+
 def _extract(state, sl=slice(None)) -> Dict[str, np.ndarray]:
     return {k: np.asarray(v[sl]) for k, v in state.items()
-            if k in _METRICS + ("completed",)}
+            if k in _METRICS + _EXTRA_OUTPUTS}
 
 
 def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
                   max_steps: Optional[int] = None,
                   impl: Optional[str] = None,
                   chunk_steps: Optional[int] = None,
-                  early_exit: bool = True) -> Dict[str, np.ndarray]:
+                  early_exit: bool = True,
+                  max_runs: Optional[int] = None) -> Dict[str, np.ndarray]:
     """Vectorized replication study. Returns {metric: np.ndarray (R,)}.
 
     jit-compiled once per (pool-structure, R, step-budget); parameter
@@ -438,13 +527,21 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
     where every replica is DONE; ``early_exit=False`` forces the full
     ``max_steps`` budget (bit-identical results — finished replicas are
     inert — which tests/test_backend.py asserts).
+
+    ``max_runs`` (default ``params.max_run_records``) sizes the exact
+    per-run duration ring buffer returned as ``run_durations`` (R,
+    max_runs) alongside ``n_runs`` and ``cur_run``.  ``max_runs=0``
+    compiles the buffer out of the scan entirely for callers that only
+    need scalar metrics: ``mean_run_duration`` stays exact via the
+    interval-sum identity over ``n_runs``/``cur_run``, but pooled
+    run-duration percentiles degrade to pooling per-replica means.
     """
     if not supports(params):
         raise _unsupported_error()
     params.validate()
     max_steps = max_steps or default_max_steps(params)
     chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, max_steps)
-    init_state = _initial_state(params, n_replicas)
+    init_state = _initial_state(params, n_replicas, max_runs)
     out = _run_chunked(_params_vector(params), jax.random.PRNGKey(seed),
                        1, n_replicas, chunk, max_steps // chunk,
                        max_steps % chunk, impl, early_exit,
@@ -456,15 +553,31 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
                         max_steps: Optional[int] = None,
                         impl: Optional[str] = None,
                         chunk_steps: Optional[int] = None,
-                        early_exit: bool = True):
-    """Batched sweep: one compiled program per pool *structure*, not per point.
+                        early_exit: bool = True,
+                        padded: bool = True,
+                        max_runs: Optional[int] = None):
+    """Batched sweep: one compiled program for the whole grid.
 
     ``params_list`` is a sequence of :class:`Params` (the sweep grid, any
-    order).  Points are grouped by :func:`_struct_key`; each group's
-    parameter vectors are stacked into a (P, 15) array, expanded to one
+    order).  With ``padded=True`` (default) the entire grid — even when
+    points differ *structurally* (job_size, pool sizes, warm_standbys,
+    systematic fraction, job_length) — is stacked into one (P, 15)
+    parameter array plus per-point padded initial states, expanded to one
     row per replica, and the whole (P * R,) batch runs through the same
-    chunked scan as :func:`simulate_ctmc` — the ``event_race`` kernel
-    sees a single flat batch axis, so Pallas block sizes stay aligned.
+    chunked scan as :func:`simulate_ctmc` in a single XLA compilation —
+    the ``event_race`` kernel sees a single flat batch axis, so Pallas
+    block sizes stay aligned.  The step budget is the max over points;
+    replicas of cheaper points finish early and sit inert, so the shared
+    head-room costs only chunks the early-exit check cannot skip.
+
+    ``padded=False`` restores the legacy grouping — one compiled program
+    per :func:`_struct_key` — for A/B benchmarking; per-point results are
+    bit-identical to the padded path whenever both step budgets suffice
+    (common random numbers are drawn per replica column either way).
+
+    Uniforms are shared across points (the batched analogue of the event
+    engine's same-seed-per-replication policy), giving common random
+    numbers across the grid.
 
     Returns a list of ``{metric: np.ndarray (R,)}`` dicts in input order.
     """
@@ -473,10 +586,18 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         if not supports(p):
             raise _unsupported_error()
         p.validate()
+    if not params_list:
+        return []
 
-    groups: Dict[tuple, list] = {}
-    for i, p in enumerate(params_list):
-        groups.setdefault(_struct_key(p), []).append(i)
+    groups: Dict[Optional[tuple], list] = {}
+    if padded:
+        # structure padding makes every point shape-compatible: one flat
+        # batch, one compilation (struct_key None -> one jit cache entry)
+        groups[None] = list(range(len(params_list)))
+    else:
+        for i, p in enumerate(params_list):
+            groups.setdefault(_struct_key(p), []).append(i)
+    mr = _max_runs_for(params_list) if max_runs is None else max_runs
 
     results: list = [None] * len(params_list)
     for skey, idxs in groups.items():
@@ -486,7 +607,7 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, steps)
         pv = jnp.stack([_params_vector(p) for p in pts])        # (P, 15)
         pv_flat = jnp.repeat(pv, R, axis=0)                     # (P*R, 15)
-        init_state = _initial_state(pts[0], P * R)
+        init_state = _initial_state_batch(pts, R, mr)
         out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P, R,
                            chunk, steps // chunk, steps % chunk, impl,
                            early_exit, skey, init_state)

@@ -1,0 +1,8 @@
+"""Version shims for the pinned jax/pallas toolchain."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+#: jax renamed TPUCompilerParams -> CompilerParams after 0.4.x; accept both
+#: so the kernels work against the pinned toolchain and future upgrades.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _event_race_kernel(rates_ref, residuals_ref, u_time_ref, u_pick_ref,
                        dt_ref, event_ref, *, k_exp: int, k_det: int):
@@ -79,7 +81,7 @@ def event_race_fwd(rates: jax.Array, residuals: jax.Array,
             jax.ShapeDtypeStruct((R,), jnp.float32),
             jax.ShapeDtypeStruct((R,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(rates, residuals, u_time, u_pick)

@@ -52,6 +52,9 @@ def test_ctmc_replications_carry_arrays_not_results():
     assert rep.results == []
     assert rep.arrays["total_time"].shape == (16,)
     assert rep.n == 16
+    # exact per-run records ride along with the scalar metrics
+    assert rep.arrays["run_durations"].shape == (16, BASE.max_run_records)
+    assert rep.arrays["n_runs"].shape == (16,)
     # n_retired is exactly zero inside the CTMC envelope; modeled
     # metrics like silent repair failures must be real counts
     assert rep.stats["n_retired"].mean == 0.0
@@ -107,6 +110,64 @@ def test_sweep_monotone_in_recovery_time():
                       base_params=BASE, engine="ctmc").run()
     ts = res.column("total_time")
     assert ts[0] < ts[1] < ts[2], ts
+
+
+# ---------------------------------------------------------------------------
+# structure padding (deterministic pins; hypothesis sweeps the structure
+# space in tests/test_property.py where available)
+# ---------------------------------------------------------------------------
+
+STRUCT_GRID = [BASE,
+               BASE.replace(job_size=40),
+               BASE.replace(spare_pool_size=16, warm_standbys=8),
+               BASE.replace(job_length=1 * DAY)]
+
+
+def test_padded_sweep_bit_identical_to_per_structure():
+    pad = simulate_ctmc_sweep(STRUCT_GRID, n_replicas=32, seed=5,
+                              max_steps=512, padded=True)
+    ref = simulate_ctmc_sweep(STRUCT_GRID, n_replicas=32, seed=5,
+                              max_steps=512, padded=False)
+    for i, (a, b) in enumerate(zip(pad, ref)):
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"point {i} metric {k}")
+
+
+def test_mixed_structure_grid_compiles_once():
+    """The whole point of structure padding: a structural grid is one
+    flat batch behind a single jit cache entry."""
+    from repro.core import vectorized
+
+    before = vectorized.compile_cache_size()
+    if before is None:
+        pytest.skip("jit cache introspection unavailable on this jax")
+    reps = run_replications_batch(STRUCT_GRID, 8, engine="ctmc",
+                                  max_steps=448)
+    after = vectorized.compile_cache_size()
+    # <= 1: another test may already have populated this exact signature
+    assert after - before <= 1
+    assert [r.engine for r in reps] == ["ctmc"] * len(STRUCT_GRID)
+    assert all(r.n == 8 for r in reps)
+
+
+def test_structural_sweep_agrees_with_event_engine():
+    """job_size is a structural knob; the padded CTMC path must stay
+    statistically indistinguishable from the event oracle."""
+    values = [24, 48]
+    ct = OneWaySweep("s", "job_size", values, n_replications=512,
+                     base_params=BASE.replace(working_pool_size=64),
+                     engine="ctmc").run()
+    ev = OneWaySweep("s", "job_size", values, n_replications=32,
+                     base_params=BASE.replace(working_pool_size=64),
+                     engine="event").run()
+    for pc, pe in zip(ct.points, ev.points):
+        sc, se_ = pc.stats["total_time"], pe.stats["total_time"]
+        pooled = np.sqrt(sc.std ** 2 / pc.n_replications
+                         + se_.std ** 2 / pe.n_replications)
+        z = (sc.mean - se_.mean) / max(pooled, 1e-9)
+        assert abs(z) < 3.5, (pc.values, sc.mean, se_.mean, z)
 
 
 # ---------------------------------------------------------------------------

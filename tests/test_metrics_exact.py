@@ -1,0 +1,152 @@
+"""Exact run-duration tracking on the CTMC path (no approximation left).
+
+The vectorized engine records failure-to-failure useful-compute intervals
+in a fixed ring buffer per replica (``run_durations`` (R, max_runs) +
+``n_runs`` + ``cur_run``).  These tests pin the invariants:
+
+  * recorded intervals sum to the total useful time accrued;
+  * ``run_duration_pooled`` matches the event engine's per-run records
+    within 2 pooled standard errors (the former total_time/(n_failures+1)
+    approximation fails this by construction);
+  * the ``max_runs`` cap surfaces a truncation stat instead of silently
+    dropping runs, and per-replica means stay exact under truncation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MINUTES_PER_DAY as DAY
+from repro.core import Params, run_replications, simulate
+from repro.core.metrics import aggregate, aggregate_arrays
+from repro.core.vectorized import simulate_ctmc
+
+BASE = Params(job_size=24, working_pool_size=32, spare_pool_size=4,
+              warm_standbys=2, job_length=1 * DAY,
+              random_failure_rate=2.0 / DAY, recovery_time=5.0,
+              auto_repair_time=30.0, manual_repair_time=120.0, seed=5)
+
+
+def _valid_mask(buf: np.ndarray, n_runs: np.ndarray) -> np.ndarray:
+    max_runs = buf.shape[1]
+    return np.arange(max_runs)[None, :] < np.minimum(n_runs, max_runs)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# interval bookkeeping invariants
+# ---------------------------------------------------------------------------
+
+def test_intervals_sum_to_total_useful_time():
+    out = simulate_ctmc(BASE, n_replicas=64, seed=2)
+    buf, n_runs, cur = out["run_durations"], out["n_runs"], out["cur_run"]
+    assert (n_runs <= buf.shape[1]).all(), "grid sized to avoid truncation"
+    sums = (buf * _valid_mask(buf, n_runs)).sum(axis=1)
+    # every recorded interval is useful compute; the in-flight interval
+    # (cur_run) is the only part not yet recorded
+    np.testing.assert_allclose(sums + cur, out["useful_work"],
+                               rtol=1e-4, atol=1.0)
+    done = out["completed"] > 0
+    assert done.any()
+    np.testing.assert_allclose(sums[done], BASE.job_length, rtol=1e-4)
+    assert (cur[done] == 0.0).all()
+
+
+def test_run_count_is_failures_plus_completion():
+    out = simulate_ctmc(BASE, n_replicas=64, seed=9)
+    expected = out["n_failures"].astype(np.int64) \
+        + (out["completed"] > 0).astype(np.int64)
+    np.testing.assert_array_equal(out["n_runs"].astype(np.int64), expected)
+    assert (out["run_durations"] >= 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# agreement with the event engine's per-run records
+# ---------------------------------------------------------------------------
+
+def test_run_duration_pooled_matches_event_engine():
+    """Acceptance: CTMC run_duration_pooled within 2 pooled SEs of the
+    event engine's exact per-run records on the seed comparison grid."""
+    rep_c = run_replications(BASE, 512, engine="ctmc")
+    results_e = simulate(BASE, 64)
+    stats_e = aggregate(results_e)
+
+    sc = rep_c.stats["run_duration_pooled"]
+    se_ = stats_e["run_duration_pooled"]
+    n_c = int(np.minimum(rep_c.arrays["n_runs"],
+                         rep_c.arrays["run_durations"].shape[1]).sum())
+    n_e = sum(len(r.run_durations) for r in results_e)
+    assert n_c > 1000 and n_e > 100
+    pooled_se = np.sqrt(sc.std ** 2 / n_c + se_.std ** 2 / n_e)
+    z = (sc.mean - se_.mean) / max(pooled_se, 1e-9)
+    assert abs(z) < 2.0, (sc.mean, se_.mean, z)
+    # the distribution shape must agree too, not just the mean
+    assert sc.percentiles[50] == pytest.approx(se_.percentiles[50], rel=0.25)
+
+
+def test_mean_run_duration_is_not_the_old_approximation():
+    """total_time/(n_failures+1) counts recovery/stall wall-clock inside
+    the intervals; the exact records must exclude it."""
+    rep = run_replications(BASE, 256, engine="ctmc")
+    approx = rep.arrays["total_time"] / (rep.arrays["n_failures"] + 1.0)
+    exact = rep.stats["mean_run_duration"].mean
+    # overheads are ~5 min recovery per ~26 min run: the approximation
+    # must be biased visibly high
+    assert approx.mean() > exact * 1.05
+
+
+# ---------------------------------------------------------------------------
+# truncation behavior
+# ---------------------------------------------------------------------------
+
+def test_max_runs_cap_surfaces_truncation_stat():
+    out = simulate_ctmc(BASE, n_replicas=16, seed=3, max_runs=4)
+    assert out["run_durations"].shape == (16, 4)
+    stats = aggregate_arrays(out)
+    assert stats["run_duration_truncated"].mean > 0.0
+    # n_runs keeps counting past the cap
+    assert (out["n_runs"] > 4).any()
+
+
+def test_mean_run_duration_exact_under_truncation():
+    """The ring buffer overwrites old records, but the per-replica mean
+    comes from the sum identity and must not move."""
+    full = aggregate_arrays(simulate_ctmc(BASE, n_replicas=32, seed=4))
+    trunc = aggregate_arrays(simulate_ctmc(BASE, n_replicas=32, seed=4,
+                                           max_runs=4))
+    assert trunc["mean_run_duration"].mean == pytest.approx(
+        full["mean_run_duration"].mean, rel=1e-6)
+    # pooled stats survive on the retained records (a tail sample of the
+    # same stationary interval distribution)
+    assert trunc["run_duration_pooled"].mean == pytest.approx(
+        full["run_duration_pooled"].mean, rel=0.2)
+
+
+def test_max_runs_zero_compiles_recording_out():
+    """max_runs=0 drops the ring buffer from the scan (perf opt-out) but
+    the exact mean survives via the n_runs/cur_run sum identity."""
+    off = simulate_ctmc(BASE, n_replicas=16, seed=3, max_runs=0)
+    assert off["run_durations"].shape == (16, 0)
+    on = simulate_ctmc(BASE, n_replicas=16, seed=3)
+    # recording never affects the trajectory itself
+    np.testing.assert_array_equal(off["n_failures"], on["n_failures"])
+    s_off, s_on = aggregate_arrays(off), aggregate_arrays(on)
+    assert s_off["mean_run_duration"].mean == pytest.approx(
+        s_on["mean_run_duration"].mean, rel=1e-6)
+    # pooled stats degrade to pooling per-replica means, not NaN
+    assert np.isfinite(s_off["run_duration_pooled"].mean)
+
+
+def test_event_engine_reports_zero_truncation():
+    stats = aggregate(simulate(BASE, 4))
+    assert stats["run_duration_truncated"].mean == 0.0
+
+
+def test_fallback_approximation_for_foreign_arrays():
+    """Arrays without run records (foreign producers) still aggregate,
+    via the documented legacy approximation."""
+    arrays = {"total_time": np.asarray([100.0, 200.0]),
+              "useful_work": np.asarray([90.0, 150.0]),
+              "n_failures": np.asarray([1.0, 3.0])}
+    stats = aggregate_arrays(arrays)
+    assert stats["mean_run_duration"].mean == pytest.approx(
+        (100.0 / 2 + 200.0 / 4) / 2)
+    assert stats["run_duration_truncated"].mean == 0.0

@@ -111,6 +111,65 @@ def test_diagnosis_probability_bounds_repairs(dp, seed):
         assert r.n_auto_repairs == 0
 
 
+# ---------------------------------------------------------------------------
+# structure-padded CTMC sweeps: padded == unpadded
+# ---------------------------------------------------------------------------
+
+def _ctmc_base(job: int, spare: int, warm: int) -> Params:
+    return Params(job_size=job, working_pool_size=job + warm + 4,
+                  spare_pool_size=spare, warm_standbys=warm,
+                  job_length=0.2 * DAY, random_failure_rate=2.0 / DAY,
+                  recovery_time=5.0, auto_repair_time=30.0,
+                  manual_repair_time=60.0)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(4, 8), st.integers(0, 2), st.integers(0, 2),
+       st.integers(1, 4), st.integers(0, 1000))
+def test_padded_sweep_matches_unpadded_mixed_grid(job, spare, warm, dsize,
+                                                  seed):
+    """A mixed-structure grid through the single-compilation padded path
+    must reproduce the legacy one-program-per-structure results per point
+    (same seed -> same per-replica-column uniforms on both paths)."""
+    from repro.core.vectorized import simulate_ctmc_sweep
+
+    base = _ctmc_base(job, spare, warm)
+    grid = [base,
+            base.replace(job_size=job + dsize,
+                         working_pool_size=job + dsize + warm + 4),
+            base.replace(spare_pool_size=spare + 2)]
+    pad = simulate_ctmc_sweep(grid, n_replicas=16, seed=seed, max_steps=256,
+                              padded=True)
+    ref = simulate_ctmc_sweep(grid, n_replicas=16, seed=seed, max_steps=256,
+                              padded=False)
+    for i, (a, b) in enumerate(zip(pad, ref)):
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_allclose(
+                a[k], b[k], rtol=1e-6, atol=1e-6,
+                err_msg=f"point {i} metric {k}")
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(4, 8), st.integers(0, 2), st.integers(0, 1000))
+def test_padded_sweep_bit_identical_same_structure(job, warm, seed):
+    """Non-structural grids (rates/times only differ) must be bit-identical
+    between the padded and per-structure paths — same program semantics,
+    same random stream."""
+    from repro.core.vectorized import simulate_ctmc_sweep
+
+    base = _ctmc_base(job, 2, warm)
+    grid = [base.replace(recovery_time=v) for v in (5.0, 15.0)]
+    pad = simulate_ctmc_sweep(grid, n_replicas=16, seed=seed, max_steps=256,
+                              padded=True)
+    ref = simulate_ctmc_sweep(grid, n_replicas=16, seed=seed, max_steps=256,
+                              padded=False)
+    for i, (a, b) in enumerate(zip(pad, ref)):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"point {i} metric {k}")
+
+
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 60))
 def test_expected_failures_scaling(seed):

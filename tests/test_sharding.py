@@ -11,19 +11,26 @@ from repro.parallel.sharding import (ParallelConfig, activation_spec,
                                      mesh_axes, param_spec)
 
 
-@pytest.fixture(scope="module")
-def mesh():
+def _abstract_mesh(sizes, axes):
     # CPU test container has 1 device unless a dryrun-style subprocess
     # sets XLA_FLAGS; build an abstract mesh over a device grid of 1 —
     # shard_if() uses mesh.shape sizes, so use a fake via AbstractMesh.
+    # jax 0.4.x takes ((name, size), ...); jax >= 0.5 takes (sizes, names).
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh(sizes, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, sizes)))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def pod_mesh():
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_mesh_axes(mesh, pod_mesh):
