@@ -162,7 +162,10 @@ def structural_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
     from repro.core import vectorized
     from repro.core.vectorized import _struct_key
 
-    base = sweep_bench_params()
+    # bench-unique ring-buffer size: gives this benchmark its own jit
+    # cache entries, so the earlier sweep_throughput run (same padded
+    # bucket otherwise) cannot turn the cold timing/compile count warm
+    base = sweep_bench_params().replace(max_run_records=96)
     values = [384 + 16 * i for i in range(n_points)]
     kw = dict(n_replications=n_replicas, base_params=base, base_seed=0)
     grid = [base.replace(job_size=v) for v in values]
@@ -209,6 +212,83 @@ def structural_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
         "max_abs_z": max(abs(p["z"]) for p in points),
         "points": points,
     }
+
+
+def bucketed_sweep_throughput(n_replicas: int = 256) -> Dict[str, object]:
+    """Shape bucketing: repeated sweeps of *different* sizes, one program.
+
+    Runs three recovery-time sweeps whose (P, R, step-budget) signatures
+    all fall in the same power-of-two bucket — (6, R), (8, R), (5, R)
+    with different budgets — first bucketed (exactly one XLA compilation
+    covering all three), then unbucketed (one per distinct shape).
+    Reports compile counts and the wall-clock of the *second and third*
+    sweeps, where bucketing pays off: they start warm instead of
+    recompiling.
+    """
+    from repro.core import run_replications_batch, vectorized
+
+    # bench-unique shape (see structural_sweep_throughput) so the
+    # compile counts measure only this benchmark's sweeps
+    base = sweep_bench_params().replace(max_run_records=80)
+
+    def grids():
+        return [[base.replace(recovery_time=5.0 + 5.0 * i)
+                 for i in range(n)] for n in (6, 8, 5)]
+
+    def timed(bucketed):
+        c0 = vectorized.compile_cache_size()
+        walls = []
+        for grid in grids():
+            t0 = time.perf_counter()
+            run_replications_batch(grid, n_replicas, engine="ctmc",
+                                   bucketed=bucketed)
+            walls.append(time.perf_counter() - t0)
+        c1 = vectorized.compile_cache_size()
+        compiles = None if c0 is None else c1 - c0
+        return walls, compiles
+
+    b_walls, b_compiles = timed(True)
+    u_walls, u_compiles = timed(False)
+    return {
+        "n_replicas": n_replicas,
+        "sweep_points": [6, 8, 5],
+        "bucketed_wall_s": b_walls,
+        "bucketed_compiles": b_compiles,
+        "unbucketed_wall_s": u_walls,
+        "unbucketed_compiles": u_compiles,
+        "resize_speedup_x": (sum(u_walls[1:]) / max(sum(b_walls[1:]), 1e-9)),
+    }
+
+
+def bucketing_smoke(n_replicas: int = 24) -> Dict[str, object]:
+    """CI guard: same-bucket sweeps of different (P, R, step-budget)
+    must share exactly one compiled program; exits nonzero otherwise."""
+    from repro.core import run_replications_batch, vectorized
+
+    base = Params(job_size=16, working_pool_size=32, spare_pool_size=4,
+                  warm_standbys=2, job_length=0.1 * MINUTES_PER_DAY,
+                  random_failure_rate=2.0 / MINUTES_PER_DAY,
+                  recovery_time=5.0, auto_repair_time=30.0,
+                  manual_repair_time=60.0, seed=0, max_run_records=11)
+    grid_a = [base.replace(recovery_time=v) for v in (5.0, 10.0, 15.0)]
+    grid_b = [base.replace(recovery_time=v)
+              for v in (5.0, 10.0, 15.0, 20.0)]
+    c0 = vectorized.compile_cache_size()
+    run_replications_batch(grid_a, n_replicas, engine="ctmc", max_steps=192)
+    run_replications_batch(grid_b, n_replicas - 7, engine="ctmc",
+                           max_steps=256)
+    c1 = vectorized.compile_cache_size()
+    compiles = None if c0 is None else c1 - c0
+    out = {"sweep_shapes": [[3, n_replicas], [4, n_replicas - 7]],
+           "compiles": compiles}
+    if compiles is None:
+        out["note"] = ("jit cache introspection unavailable on this jax; "
+                       "bucketing guard skipped")
+    elif compiles != 1:
+        raise SystemExit(
+            f"bucketing regression: two same-bucket sweeps compiled "
+            f"{compiles} XLA programs, expected exactly 1")
+    return out
 
 
 def structural_smoke(n_points: int = 4, n_replicas: int = 32,
@@ -283,12 +363,16 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
     import sys
 
     if "--smoke" in sys.argv:
-        print(json.dumps(structural_smoke(), indent=2))
+        print(json.dumps({"structural": structural_smoke(),
+                          "bucketing": bucketing_smoke()}, indent=2))
         sys.exit(0)
     sw = sweep_throughput()
     sw["structural"] = structural_sweep_throughput()
+    sw["bucketing"] = bucketed_sweep_throughput()
     print(json.dumps({k: v for k, v in sw.items()
-                      if k not in ("points", "structural")}, indent=2))
+                      if k not in ("points", "structural", "bucketing")},
+                     indent=2))
     print(json.dumps({k: v for k, v in sw["structural"].items()
                       if k != "points"}, indent=2))
+    print(json.dumps(sw["bucketing"], indent=2))
     print("wrote", write_sweep_artifact(sw))

@@ -43,6 +43,7 @@ sweep = OneWaySweep("capacity", "working_pool_size", POOLS,
 rows = []
 for point in sweep.run().points:
     pool = point.values["working_pool_size"]
+    ettf, ettr = point.stats["run_duration_dist"], point.stats["recovery_dist"]
     rows.append({
         "pool": pool,
         "extra": pool - base.job_size - base.warm_standbys,
@@ -53,6 +54,13 @@ for point in sweep.run().points:
         # exact pooled run durations (time between restarts), not the
         # old total_time/(n_failures+1) approximation
         "ettf_h": point.stats["run_duration_pooled"].mean / 60,
+        # streaming-histogram percentiles: the distribution tails that
+        # drive checkpoint cadence and spare capacity (exact to one bin
+        # width, unbounded run count — no ring-buffer truncation)
+        "ettf_p50": ettf.percentiles[50] / 60,
+        "ettf_p99": ettf.percentiles[99] / 60,
+        "ettr_p50": ettr.percentiles[50],
+        "ettr_p99": ettr.percentiles[99],
     })
 
 print(f"{'pool':>6} {'extra':>6} {'train hours':>14} {'stall h':>9} "
@@ -60,6 +68,14 @@ print(f"{'pool':>6} {'extra':>6} {'train hours':>14} {'stall h':>9} "
 for r in rows:
     print(f"{r['pool']:>6} {r['extra']:>6} {r['hours']:>9.1f} +-{r['ci']:<4.1f}"
           f" {r['stall_h']:>9.2f} {r['preempt']:>9.2f} {r['ettf_h']:>8.2f}")
+
+print("\ndistribution percentiles (streaming histograms; h = hours, "
+      "min = minutes):")
+print(f"{'pool':>6} {'ettf p50 h':>11} {'ettf p99 h':>11} "
+      f"{'ettr p50 min':>13} {'ettr p99 min':>13}")
+for r in rows:
+    print(f"{r['pool']:>6} {r['ettf_p50']:>11.2f} {r['ettf_p99']:>11.2f} "
+          f"{r['ettr_p50']:>13.1f} {r['ettr_p99']:>13.1f}")
 
 # recommendation: the smallest pool within 0.5% of the best time
 best = min(r["hours"] for r in rows)

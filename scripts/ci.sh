@@ -2,18 +2,28 @@
 # Tier-1 verification in one command (what the roadmap calls "tier-1
 # verify"), plus the machine-readable sweep-performance artifact.
 #
-#   scripts/ci.sh           # tests + structural-sweep compile smoke
+#   scripts/ci.sh           # tests + compile smokes (structure + bucketing)
 #   scripts/ci.sh --bench   # also: full sweep benchmarks -> BENCH_sweep.json
+#                           #       (incl. the "bucketing" section)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+# -p no:randomly pins collection order if pytest-randomly is ever
+# installed, so the tier-1 pass is reproducible run to run
+python -m pytest -x -q -p no:randomly
 
-# structural-sweep benchmark in smoke mode: a tiny mixed-structure grid
-# must compile exactly one XLA program per padded group; exits nonzero
-# on a compile-count regression.
+# ordering-independence check (--lf-safe): the distribution/bucketing
+# suites must pass rerun standalone with a cold pytest cache — exactly
+# what a `pytest --lf` retry after a failure would execute
+python -m pytest -q -p no:randomly -p no:cacheprovider \
+    tests/test_histograms.py tests/test_bucketing.py
+
+# compile-count smokes: a tiny mixed-structure grid must compile exactly
+# one XLA program per padded group, and two same-bucket sweeps of
+# different (P, R, step-budget) must share exactly one program; exits
+# nonzero on either regression.
 python benchmarks/engine_perf.py --smoke
 
 if [[ "${1:-}" == "--bench" ]]; then

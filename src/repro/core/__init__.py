@@ -32,20 +32,25 @@ from .distributions import (Deterministic, Distribution, Exponential,
 from .backend import (Replications, resolve_engine, run_replications,
                       run_replications_batch)
 from .engine import Environment, Event, Interrupt, Process, Timeout
-from .metrics import RunResult, Stat, aggregate, aggregate_arrays, summarize
+from .histograms import HIST_CHANNELS, Histogram, HistogramSpec
+from .metrics import (RunResult, Stat, aggregate, aggregate_arrays,
+                      histograms_from_arrays, histograms_from_results,
+                      summarize)
 from .params import MINUTES_PER_DAY, PAPER_TABLE1_RANGES, Params, paper_table1_defaults
 from .simulation import ClusterSimulation, simulate, simulate_one
 from .sweeps import OneWaySweep, SweepResult, TwoWaySweep, load_experiment
 
 __all__ = [
     "Bathtub", "CheckpointPlan", "ClusterSimulation", "Deterministic",
-    "Distribution", "Environment", "Event", "Exponential", "Interrupt",
+    "Distribution", "Environment", "Event", "Exponential", "HIST_CHANNELS",
+    "Histogram", "HistogramSpec", "Interrupt",
     "JobSpec", "LogNormal", "MINUTES_PER_DAY", "MultiJobResult",
     "MultiJobSimulation", "OneWaySweep", "PAPER_TABLE1_RANGES", "Params",
     "Process", "Replications", "RunResult", "Stat", "SweepResult", "Timeout",
     "TraceEvent", "Tracer", "TwoWaySweep", "Weibull", "aggregate",
     "aggregate_arrays", "cluster_failure_rate", "expected_failures",
-    "expected_total_time", "load_experiment", "make_distribution",
+    "expected_total_time", "histograms_from_arrays",
+    "histograms_from_results", "load_experiment", "make_distribution",
     "paper_table1_defaults", "plan_checkpoints", "register_distribution",
     "repair_shop_occupancy", "resolve_engine", "run_replications",
     "run_replications_batch", "simulate", "simulate_multijob", "simulate_one",

@@ -31,7 +31,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from . import vectorized
-from .metrics import RunResult, Stat, aggregate, aggregate_arrays
+from .histograms import Histogram
+from .metrics import (RunResult, Stat, aggregate, aggregate_arrays,
+                      histograms_from_arrays, histograms_from_results)
 from .params import Params
 from .simulation import simulate
 
@@ -66,6 +68,10 @@ class Replications:
     results: List[RunResult] = field(default_factory=list)
     #: raw {metric: (n,) ndarray} (ctmc engine only)
     arrays: Optional[Dict[str, np.ndarray]] = None
+    #: pooled streaming histograms per channel (both engines, whenever
+    #: ``Params.histogram`` is set) — unbounded-run-count ETTF/ETTR/
+    #: waiting distributions, percentiles exact to one bin width
+    histograms: Dict[str, Histogram] = field(default_factory=dict)
 
 
 def _from_arrays(arrays: Dict[str, np.ndarray], n: int) -> Replications:
@@ -76,8 +82,18 @@ def _from_arrays(arrays: Dict[str, np.ndarray], n: int) -> Replications:
             "finishing the job; means are biased low — raise max_steps "
             "(stats carry a 'completed' entry with the finished fraction)",
             RuntimeWarning, stacklevel=3)
-    return Replications(engine="ctmc", n=n, stats=aggregate_arrays(arrays),
-                        arrays=arrays)
+    hists = histograms_from_arrays(arrays)
+    return Replications(engine="ctmc", n=n,
+                        stats=aggregate_arrays(arrays, histograms=hists),
+                        arrays=arrays, histograms=hists)
+
+
+def _from_results(results: List[RunResult], n: int,
+                  params: Params) -> Replications:
+    hists = histograms_from_results(results, params.histogram)
+    return Replications(engine="event", n=n,
+                        stats=aggregate(results, histograms=hists),
+                        results=results, histograms=hists)
 
 
 def run_replications(params: Params, n: int, engine: str = "auto",
@@ -92,8 +108,7 @@ def run_replications(params: Params, n: int, engine: str = "auto",
                                           impl=impl, max_steps=max_steps)
         return _from_arrays(arrays, n)
     results = simulate(params, n, base_seed=base_seed)
-    return Replications(engine="event", n=n, stats=aggregate(results),
-                        results=results)
+    return _from_results(results, n, params)
 
 
 def run_replications_batch(params_list: Sequence[Params], n: int,
@@ -103,6 +118,7 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
                            max_steps: Optional[int] = None,
                            progress: Optional[Callable[[int], None]] = None,
                            padded: bool = True,
+                           bucketed: bool = True,
                            ) -> List[Replications]:
     """Replication studies for a whole sweep grid, batched where possible.
 
@@ -110,8 +126,12 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
     ``vectorized.simulate_ctmc_sweep`` call — with ``padded=True`` (the
     default) even a mixed-structure grid compiles exactly one XLA
     program; ``padded=False`` keeps the legacy one-program-per-structure
-    grouping for A/B benchmarks.  The rest run through the event engine
-    one by one.  Results come back in input order regardless of routing.
+    grouping for A/B benchmarks.  ``bucketed=True`` (default, padded path
+    only) additionally rounds the (points, replicas, step-budget) shape
+    signature up to its power-of-two bucket with inert padding rows, so
+    repeated sweeps of different sizes reuse one compiled program.  The
+    rest run through the event engine one by one.  Results come back in
+    input order regardless of routing.
 
     ``progress(i)`` is invoked when work on grid point ``i`` starts:
     once per point as the sequential event engine reaches it, and for
@@ -130,7 +150,8 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
                 else base_seed)
         arrays_list = vectorized.simulate_ctmc_sweep(
             [params_list[i] for i in ctmc_idx], n_replicas=n, seed=seed,
-            impl=impl, max_steps=max_steps, padded=padded)
+            impl=impl, max_steps=max_steps, padded=padded,
+            bucketed=bucketed)
         for i, arrays in zip(ctmc_idx, arrays_list):
             out[i] = _from_arrays(arrays, n)
 
@@ -139,6 +160,5 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
             if progress:
                 progress(i)
             results = simulate(params_list[i], n, base_seed=base_seed)
-            out[i] = Replications(engine="event", n=n,
-                                  stats=aggregate(results), results=results)
+            out[i] = _from_results(results, n, params_list[i])
     return out

@@ -149,16 +149,22 @@ class Coordinator:
                 self.repair_shop.submit(failed)
                 continue
 
+            # downtime clock for the recovery/waiting distribution
+            # channels: failure instant -> compute restart (ETTR), with
+            # the replacement-acquisition part recorded separately
+            t_fail = env.now
             target = self._diagnose(failed)
             if target is not None:
                 self._remove_running(target)
                 self.repair_shop.submit(target)
                 replacement = yield from self.scheduler.acquire_replacement()
                 self._add_running(replacement)
+            m.waiting_durations.append(env.now - t_fail)
 
             # checkpoint reload + restart
             yield env.timeout(p.recovery_time)
             m.recovery_overhead += p.recovery_time
+            m.recovery_durations.append(env.now - t_fail)
 
         m.total_time = env.now
         self.scheduler.release_all(self.running_good + self.running_bad)

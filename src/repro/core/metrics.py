@@ -12,9 +12,11 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
+
+from .histograms import HIST_CHANNELS, Histogram, HistogramSpec
 
 
 @dataclass
@@ -39,6 +41,11 @@ class RunResult:
     recovery_overhead: float = 0.0     # sum of recovery_time charges
     lost_work: float = 0.0             # checkpoint-rollback loss (extension)
     run_durations: List[float] = field(default_factory=list)
+    #: per-failure downtime (failure -> compute restart; ETTR) and the
+    #: replacement-acquisition part of it alone — the event-engine
+    #: sources of the "recovery" / "waiting" histogram channels
+    recovery_durations: List[float] = field(default_factory=list)
+    waiting_durations: List[float] = field(default_factory=list)
     timed_out: bool = False            # hit max_sim_time before completing
 
     @property
@@ -60,8 +67,15 @@ class RunResult:
         d = dataclasses.asdict(self)
         d["mean_run_duration"] = self.mean_run_duration
         d["overhead_fraction"] = self.overhead_fraction
-        del d["run_durations"]
+        for k in ("run_durations", "recovery_durations", "waiting_durations"):
+            del d[k]
         return d
+
+
+#: histogram channel -> RunResult list holding its raw values
+_CHANNEL_SOURCES = {"run_duration": "run_durations",
+                    "recovery": "recovery_durations",
+                    "waiting": "waiting_durations"}
 
 
 #: metric -> extractor used for aggregate statistics
@@ -74,6 +88,9 @@ _SCALAR_METRICS = (
 )
 
 _PERCENTILES = (25, 50, 75, 90, 99)
+#: histogram-backed stats add the deep tail (unbounded run counts make
+#: p99.9 meaningful); keys stay numeric for CSV column naming
+_HIST_PERCENTILES = (25, 50, 75, 90, 99, 99.9)
 
 
 @dataclass(frozen=True)
@@ -89,6 +106,8 @@ class Stat:
     def of(cls, xs: Sequence[float]) -> "Stat":
         a = np.asarray(list(xs), dtype=np.float64)
         if a.size == 0:
+            # empty inputs (empty sweeps, zero recorded runs) must yield
+            # a well-formed NaN Stat, never raise from np.percentile
             nan = float("nan")
             return cls(nan, nan, nan, nan, nan, {p: nan for p in _PERCENTILES})
         return cls(
@@ -100,14 +119,80 @@ class Stat:
             percentiles={p: float(np.percentile(a, p)) for p in _PERCENTILES},
         )
 
+    @classmethod
+    def from_histogram(cls, h: Histogram) -> "Stat":
+        """Distribution statistics from accumulated bin counts.
+
+        Percentiles (incl. p99.9) are exact to one bin width; mean/std
+        use geometric bin midpoints.  An empty histogram yields the same
+        NaN-filled Stat as an empty sequence.
+        """
+        if h.total == 0:
+            nan = float("nan")
+            return cls(nan, nan, nan, nan, nan,
+                       {p: nan for p in _HIST_PERCENTILES})
+        return cls(
+            mean=h.mean(),
+            median=h.percentile(50),
+            std=h.std(),
+            minimum=h.minimum(),
+            maximum=h.maximum(),
+            percentiles={p: h.percentile(p) for p in _HIST_PERCENTILES},
+        )
+
     def ci95_halfwidth(self, n: int) -> float:
         if n <= 1 or math.isnan(self.std):
             return 0.0
         return 1.96 * self.std / math.sqrt(n)
 
 
-def aggregate(results: Sequence[RunResult]) -> Dict[str, Stat]:
-    """Cross-replication statistics for every scalar output metric."""
+def histograms_from_results(results: Sequence[RunResult],
+                            spec: Optional[HistogramSpec],
+                            ) -> Dict[str, Histogram]:
+    """Pooled per-channel histograms from event-engine per-run lists.
+
+    This is the pure-numpy reference accumulator: the CTMC scan fills
+    the identical bin layout in compiled code, so the two engines'
+    distributions are directly comparable bin by bin.
+    """
+    if spec is None:
+        return {}
+    out: Dict[str, Histogram] = {}
+    for ch in spec.channels:
+        h = Histogram(spec)
+        for r in results:
+            h.add(getattr(r, _CHANNEL_SOURCES[ch]))
+        out[ch] = h
+    return out
+
+
+def histograms_from_arrays(arrays: Dict[str, np.ndarray],
+                           ) -> Dict[str, Histogram]:
+    """Pooled per-channel histograms from CTMC per-replica bin counts."""
+    if "hist_edges" not in arrays:
+        return {}
+    edges = np.asarray(arrays["hist_edges"], np.float64)
+    out: Dict[str, Histogram] = {}
+    for ch in HIST_CHANNELS:
+        key = f"hist_{ch}"
+        if key in arrays:
+            counts = np.asarray(arrays[key], np.float64).sum(axis=0)
+            out[ch] = Histogram(edges, counts)
+    return out
+
+
+def aggregate(results: Sequence[RunResult],
+              histogram: Optional[HistogramSpec] = None,
+              histograms: Optional[Dict[str, Histogram]] = None,
+              ) -> Dict[str, Stat]:
+    """Cross-replication statistics for every scalar output metric.
+
+    With a :class:`HistogramSpec`, also reports ``{channel}_dist`` Stats
+    (percentiles incl. p99.9, exact to one bin width) from the pooled
+    per-run lists — the event-engine counterpart of the CTMC engine's
+    streaming histograms.  Callers that already pooled (the backend)
+    pass the prebuilt ``histograms`` dict to skip re-binning.
+    """
     out: Dict[str, Stat] = {}
     for name in _SCALAR_METRICS:
         out[name] = Stat.of([float(getattr(r, name)) for r in results])
@@ -120,10 +205,16 @@ def aggregate(results: Sequence[RunResult]) -> Dict[str, Stat]:
         pooled.extend(r.run_durations)
     out["run_duration_pooled"] = Stat.of(pooled)
     out["run_duration_truncated"] = Stat.of([0.0] * len(results))
+    if histograms is None:
+        histograms = histograms_from_results(results, histogram)
+    for ch, h in histograms.items():
+        out[f"{ch}_dist"] = Stat.from_histogram(h)
     return out
 
 
-def aggregate_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, Stat]:
+def aggregate_arrays(arrays: Dict[str, np.ndarray],
+                     histograms: Optional[Dict[str, Histogram]] = None,
+                     ) -> Dict[str, Stat]:
     """:func:`aggregate`-compatible statistics from per-replica arrays.
 
     Input is the ``{metric: (R,) ndarray}`` dict produced by the
@@ -144,6 +235,13 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, Stat]:
     the event engine applies to its per-run lists — and
     ``run_duration_truncated`` counts the records the cap overwrote
     (raise ``Params.max_run_records`` to keep them).
+
+    Streaming-histogram channels (``hist_{channel}`` (R, n_bins+2)
+    per-replica counts + shared ``hist_edges``) pool across replicas into
+    ``{channel}_dist`` Stats whose percentiles are exact to one bin width
+    with **no** run-count bound — the trustworthy distribution source
+    whenever ``run_duration_truncated`` is nonzero.  A prebuilt
+    ``histograms`` dict (the backend's) skips re-pooling.
 
     Legacy fallback: arrays lacking the run-duration records (foreign
     producers) degrade to the old total_time/(n_failures+1)
@@ -197,6 +295,10 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray]) -> Dict[str, Stat]:
                                               np.float64))
     out["run_duration_pooled"] = Stat.of(pooled)
     out["run_duration_truncated"] = Stat.of(truncated)
+    if histograms is None:
+        histograms = histograms_from_arrays(arrays)
+    for ch, h in histograms.items():
+        out[f"{ch}_dist"] = Stat.from_histogram(h)
     return out
 
 

@@ -15,6 +15,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
+from .histograms import HistogramSpec
+
 MINUTES_PER_DAY = 24 * 60
 
 
@@ -89,6 +91,13 @@ class Params:
     #: regardless.  The event engine keeps full Python lists and ignores
     #: this.
     max_run_records: int = 128
+    #: streaming distribution outputs: log-spaced histograms of run
+    #: durations (ETTF), recovery downtime (ETTR), and replacement
+    #: waiting, accumulated with no run-count bound on both engines.
+    #: Percentiles are exact to one bin width (see
+    #: :class:`repro.core.histograms.HistogramSpec`); ``None`` compiles
+    #: the accumulator out of the CTMC scan entirely.
+    histogram: Optional[HistogramSpec] = field(default_factory=HistogramSpec)
 
     # -------------------------------------------------------------------------
     def validate(self) -> None:
@@ -116,6 +125,8 @@ class Params:
                 raise ValueError(f"{name} must be non-negative")
         if self.max_run_records < 1:
             raise ValueError("max_run_records must be >= 1")
+        if self.histogram is not None:
+            self.histogram.validate()
 
     def replace(self, **kwargs) -> "Params":
         return dataclasses.replace(self, **kwargs)
@@ -146,6 +157,8 @@ class Params:
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown Params fields: {sorted(unknown)}")
+        if isinstance(d.get("histogram"), dict):   # to_dict/yaml round trip
+            d = dict(d, histogram=HistogramSpec.from_dict(d["histogram"]))
         return cls(**d)
 
 

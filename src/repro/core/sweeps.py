@@ -60,6 +60,10 @@ def _apply_param(params: Params, name: str, value: Any) -> Params:
     return params.replace(**{name: value})
 
 
+#: percentiles written per distribution channel to sweep tables
+DIST_PERCENTILES = (50, 90, 99)
+
+
 @dataclass
 class SweepPoint:
     values: Dict[str, Any]
@@ -69,6 +73,8 @@ class SweepPoint:
     #: CTMC path aggregates arrays directly and leaves ``results`` empty)
     n: Optional[int] = None
     engine: str = "event"
+    #: pooled streaming histograms per channel (when Params.histogram set)
+    histograms: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def n_replications(self) -> int:
@@ -80,12 +86,20 @@ class SweepPoint:
             out[c] = self.stats[c].mean
         out["total_time_ci95"] = self.stats["total_time"].ci95_halfwidth(
             self.n_replications)
+        # distribution percentiles from the streaming histograms, e.g.
+        # run_duration_p50 / recovery_p99 — exact to one bin width of the
+        # Params.histogram spec (a resolution caveat, not sampling error)
+        for name, stat in self.stats.items():
+            if name.endswith("_dist"):
+                for q in DIST_PERCENTILES:
+                    out[f"{name[:-5]}_p{q}"] = stat.percentiles.get(
+                        q, float("nan"))
         return out
 
     @classmethod
     def of(cls, values: Dict[str, Any], rep: Replications) -> "SweepPoint":
         return cls(values, rep.results, rep.stats, n=rep.n,
-                   engine=rep.engine)
+                   engine=rep.engine, histograms=rep.histograms)
 
 
 @dataclass
@@ -129,7 +143,7 @@ class OneWaySweep:
     def __init__(self, title: str, parameter: str, values: Sequence[Any],
                  n_replications: int = 5, base_params: Optional[Params] = None,
                  base_seed: int = 0, engine: str = "auto",
-                 padded: bool = True):
+                 padded: bool = True, bucketed: bool = True):
         self.title = title
         self.parameter = parameter
         self.values = list(values)
@@ -138,6 +152,7 @@ class OneWaySweep:
         self.base_seed = base_seed
         self.engine = engine
         self.padded = padded
+        self.bucketed = bucketed
 
     def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
         grid = [_apply_param(self.base_params, self.parameter, v)
@@ -151,7 +166,8 @@ class OneWaySweep:
         reps = run_replications_batch(grid, self.n_replications,
                                       engine=self.engine,
                                       base_seed=self.base_seed, progress=cb,
-                                      padded=self.padded)
+                                      padded=self.padded,
+                                      bucketed=self.bucketed)
         points = [SweepPoint.of({self.parameter: v}, rep)
                   for v, rep in zip(self.values, reps)]
         return SweepResult(self.title, [self.parameter], points)
@@ -164,7 +180,7 @@ class TwoWaySweep:
                  parameter_b: str, values_b: Sequence[Any],
                  n_replications: int = 5, base_params: Optional[Params] = None,
                  base_seed: int = 0, engine: str = "auto",
-                 padded: bool = True):
+                 padded: bool = True, bucketed: bool = True):
         self.title = title
         self.parameter_a, self.values_a = parameter_a, list(values_a)
         self.parameter_b, self.values_b = parameter_b, list(values_b)
@@ -173,6 +189,7 @@ class TwoWaySweep:
         self.base_seed = base_seed
         self.engine = engine
         self.padded = padded
+        self.bucketed = bucketed
 
     def run(self, progress: Optional[Callable[[str], None]] = None) -> SweepResult:
         combos = [(va, vb) for va in self.values_a for vb in self.values_b]
@@ -186,7 +203,8 @@ class TwoWaySweep:
         reps = run_replications_batch(grid, self.n_replications,
                                       engine=self.engine,
                                       base_seed=self.base_seed, progress=cb,
-                                      padded=self.padded)
+                                      padded=self.padded,
+                                      bucketed=self.bucketed)
         points = [SweepPoint.of({self.parameter_a: va, self.parameter_b: vb},
                                 rep)
                   for (va, vb), rep in zip(combos, reps)]

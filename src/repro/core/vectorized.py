@@ -33,6 +33,27 @@ in-flight interval, so ``metrics.aggregate_arrays`` reports
 ``run_duration_pooled`` / ``mean_run_duration`` exactly instead of the
 former total_time/(n_failures+1) approximation.
 
+Streaming histograms: alongside the ring buffer the scan accumulates
+per-replica log-spaced histograms (``Params.histogram``, a
+:class:`repro.core.histograms.HistogramSpec`) of run durations, recovery
+downtime (ETTR), and replacement waiting — O(bins) memory with **no**
+run-count bound, so distribution percentiles survive multi-year horizons
+where the ring buffer truncates.  The bin layout matches the pure-numpy
+reference accumulator in :mod:`repro.core.histograms` (left-closed /
+right-open, under/overflow slots), so both engines emit comparable
+distributions; ``histogram=None`` compiles the accumulator out.
+
+Shape bucketing: on top of structure padding, ``simulate_ctmc_sweep``
+(``bucketed=True``, the default on the padded path) rounds the point
+count P and replica count R up to powers of two with *inert* padding
+rows (phase DONE from step 0, zero rates, masked out of extraction) and
+rounds the step budget up to a whole number of chunks with the chunk
+count passed as a traced scalar — so repeated sweeps of different
+(P, R, step-budget) signatures inside one bucket share a single XLA
+program.  Uniform draws are always generated at the power-of-two replica
+width and sliced, which keeps bucketed results bit-identical to
+unbucketed on the real rows.
+
 Compartment classes: c = 2*origin + bad, i.e.
   0: working-origin good   1: working-origin bad
   2: spare-origin good     3: spare-origin bad
@@ -62,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from .histograms import HIST_CHANNELS
 from .params import Params
 
 COMPUTE, OVERHEAD, STALL, DONE = 0, 1, 2, 3
@@ -147,9 +169,48 @@ def _initial_state_batch(pts, R: int, max_runs: int) -> Dict[str, jnp.ndarray]:
     state["cur_run"] = jnp.zeros((B,), jnp.float32)
     state["n_runs"] = jnp.zeros((B,), jnp.int32)
     state["run_durations"] = jnp.zeros((B, max_runs), jnp.float32)
+    spec = pts[0].histogram
+    if spec is not None:
+        # every channel is accumulated when histograms are on (fixed
+        # layout -> one compiled shape); spec.channels filters reporting.
+        # The grid shares the first point's bin layout.
+        state["hist"] = jnp.zeros((B, len(HIST_CHANNELS), spec.n_counts),
+                                  jnp.float32)
+        state["hist_edges"] = jnp.asarray(spec.edges(), jnp.float32)
     for m in _METRICS:
         state[m] = jnp.zeros((B,), jnp.float32)
     return state
+
+
+#: state entries with no leading replica axis (scan-invariant constants)
+_UNBATCHED_STATE = ("hist_edges",)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _bucket_pad_state(state: Dict[str, jnp.ndarray], P: int, R: int,
+                      P_pad: int, R_pad: int) -> Dict[str, jnp.ndarray]:
+    """Pad a (P*R, ...) point-major state to (P_pad*R_pad, ...).
+
+    Padding rows start in phase DONE with zero occupancies, so they carry
+    zero rates and are inert for the entire scan — including the global
+    early-exit check.  Extraction masks them out; only the shared shape
+    signature (and therefore the compiled program) sees them.
+    """
+    out: Dict[str, jnp.ndarray] = {}
+    for k, v in state.items():
+        if k in _UNBATCHED_STATE:
+            out[k] = v
+            continue
+        v = v.reshape((P, R) + v.shape[1:])
+        pad = [(0, P_pad - P), (0, R_pad - R)] + [(0, 0)] * (v.ndim - 2)
+        out[k] = jnp.pad(v, pad).reshape((P_pad * R_pad,) + v.shape[2:])
+    real = ((jnp.arange(P_pad * R_pad) // R_pad < P)
+            & (jnp.arange(P_pad * R_pad) % R_pad < R))
+    out["phase"] = jnp.where(real, out["phase"], DONE)
+    return out
 
 
 def _initial_state(p: Params, R: int,
@@ -377,6 +438,31 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         + jnp.where(to_stalled, ns["t"] - s["stall_start"], 0.0)
     ns["recovery_overhead"] = ns["recovery_overhead"] \
         + jnp.where(to_stalled, recovery, 0.0)
+
+    # ---- streaming histograms -------------------------------------------
+    # O(bins) distribution accumulators with no run-count bound (the ring
+    # buffer above truncates; these do not).  Bin layout mirrors
+    # histograms.Histogram: searchsorted(side="right") over log-spaced
+    # edges with under/overflow slots.  A failure resolved through the
+    # waterfall records its downtime (ETTR) immediately; a stalled
+    # failure records when the repaired server restarts the job, so the
+    # stall interval is included — matching the event engine's
+    # failure-to-restart timing.
+    if "hist" in s:
+        stall_wait = ns["t"] - s["stall_start"]
+        ended = resolves | to_stalled
+        downtime = jnp.where(resolves, fail_timer, stall_wait + recovery)
+        acquire_wait = jnp.where(resolves, fail_timer - recovery, stall_wait)
+        # one fused searchsorted + scatter-add for all three channels
+        # (HIST_CHANNELS order) — per-channel scatters triple the
+        # per-step accumulator cost
+        vals = jnp.stack([run_val, downtime, acquire_wait], axis=1)
+        masks = jnp.stack([record, ended, ended], axis=1)       # (B, 3)
+        idx = jnp.searchsorted(s["hist_edges"], vals, side="right")
+        rows = jnp.arange(vals.shape[0])[:, None]
+        chan = jnp.arange(vals.shape[1])[None, :]
+        ns["hist"] = s["hist"].at[rows, chan, idx].add(
+            masks.astype(jnp.float32))
     return ns
 
 
@@ -423,20 +509,27 @@ def _struct_key(p: Params):
             round(p.job_length, 3), round(p.host_selection_time, 3))
 
 
-@partial(jax.jit, static_argnames=("P", "R", "chunk", "n_chunks", "rem",
+@partial(jax.jit, static_argnames=("P", "R", "chunk", "rem",
                                    "impl", "early_exit", "struct_key"))
 def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
-                 chunk: int, n_chunks: int, rem: int, impl: Optional[str],
+                 chunk: int, n_chunks, rem: int, impl: Optional[str],
                  early_exit: bool, struct_key,
                  init_state: Dict[str, jnp.ndarray]):
     """Chunked scan with early exit; batch axis is B = P * R (point-major).
 
     Runs exactly ``n_chunks * chunk + rem`` steps (minus chunks skipped
-    by early exit).  Uniforms are drawn per *replica column* (R, 8) and
-    tiled across the P points, so every sweep point sees common random
-    numbers — the batched analogue of the event engine's
-    same-seed-per-replication policy.
+    by early exit).  ``n_chunks`` is a *traced* scalar — the while-loop
+    trip count — so any two budgets with the same chunk size and
+    remainder share one compiled program (the bucketed sweep path rounds
+    the budget so ``rem == 0`` always).  Uniforms are drawn per *replica
+    column* at the power-of-two width ``next_pow2(R)`` and sliced to R,
+    then tiled across the P points: every sweep point sees common random
+    numbers (the batched analogue of the event engine's
+    same-seed-per-replication policy), and a bucket-padded run draws the
+    identical stream for its real replica columns.
     """
+    R_draw = _next_pow2(R)
+
     def scan_body(state, u):
         if P > 1:
             u = jnp.tile(u, (P, 1))
@@ -445,8 +538,11 @@ def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
     def run_chunk(state, i, n_steps):
         # one batched threefry call per chunk (a per-step split + draw is
         # the dominant scan cost on CPU)
-        us = jax.random.uniform(jax.random.fold_in(key, i), (n_steps, R, 8),
+        us = jax.random.uniform(jax.random.fold_in(key, i),
+                                (n_steps, R_draw, 8),
                                 minval=1e-12, maxval=1.0)
+        if R_draw != R:
+            us = us[:, :R]
         state, _ = jax.lax.scan(scan_body, state, us)
         return state
 
@@ -507,9 +603,21 @@ def _unsupported_error() -> ValueError:
 _EXTRA_OUTPUTS = ("completed", "run_durations", "n_runs", "cur_run")
 
 
-def _extract(state, sl=slice(None)) -> Dict[str, np.ndarray]:
-    return {k: np.asarray(v[sl]) for k, v in state.items()
-            if k in _METRICS + _EXTRA_OUTPUTS}
+def _extract(state, sl=slice(None), channels=()) -> Dict[str, np.ndarray]:
+    out = {k: np.asarray(v[sl]) for k, v in state.items()
+           if k in _METRICS + _EXTRA_OUTPUTS}
+    if "hist" in state and channels:
+        hist = np.asarray(state["hist"][sl], np.float64)
+        for ci, ch in enumerate(HIST_CHANNELS):
+            if ch in channels:
+                out[f"hist_{ch}"] = hist[:, ci]
+        out["hist_edges"] = np.asarray(state["hist_edges"], np.float64)
+    return out
+
+
+def _hist_channels(pts) -> tuple:
+    spec = pts[0].histogram
+    return spec.channels if spec is not None else ()
 
 
 def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
@@ -543,10 +651,10 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
     chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, max_steps)
     init_state = _initial_state(params, n_replicas, max_runs)
     out = _run_chunked(_params_vector(params), jax.random.PRNGKey(seed),
-                       1, n_replicas, chunk, max_steps // chunk,
+                       1, n_replicas, chunk, jnp.int32(max_steps // chunk),
                        max_steps % chunk, impl, early_exit,
                        _struct_key(params), init_state)
-    return _extract(out)
+    return _extract(out, channels=_hist_channels([params]))
 
 
 def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
@@ -555,6 +663,7 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
                         chunk_steps: Optional[int] = None,
                         early_exit: bool = True,
                         padded: bool = True,
+                        bucketed: bool = True,
                         max_runs: Optional[int] = None):
     """Batched sweep: one compiled program for the whole grid.
 
@@ -575,6 +684,17 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
     bit-identical to the padded path whenever both step budgets suffice
     (common random numbers are drawn per replica column either way).
 
+    ``bucketed=True`` (the default; only active on the padded path)
+    additionally buckets the *shape* signature: P and R round up to
+    powers of two with inert phase-DONE padding rows, and the chunk
+    count is traced, so repeated sweeps of any size inside one bucket
+    reuse a single XLA program.  A *derived* default budget rounds up to
+    a whole number of chunks (remainder statically 0); an explicit
+    ``max_steps`` is honored exactly.  Real rows are bit-identical to
+    ``bucketed=False`` for any explicit ``max_steps``, and under the
+    default budget whenever every replica finishes (early exit skips
+    the rounded-up head-room); padding rows never reach the caller.
+
     Uniforms are shared across points (the batched analogue of the event
     engine's same-seed-per-replication policy), giving common random
     numbers across the grid.
@@ -588,6 +708,15 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         p.validate()
     if not params_list:
         return []
+    if len({p.histogram for p in params_list}) > 1:
+        # the batch shares one in-scan accumulator layout (bin edges +
+        # channel set are part of the compiled state), so a mixed-spec
+        # grid cannot be honored point by point — reject it instead of
+        # silently applying the first point's spec to every point
+        raise ValueError(
+            "all points of a batched CTMC sweep must share the same "
+            "Params.histogram spec (the in-scan accumulator layout is "
+            "per-batch); split the grid or unify the spec")
 
     groups: Dict[Optional[tuple], list] = {}
     if padded:
@@ -599,18 +728,34 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
             groups.setdefault(_struct_key(p), []).append(i)
     mr = _max_runs_for(params_list) if max_runs is None else max_runs
 
+    bucket = padded and bucketed
+    channels = _hist_channels(params_list)
     results: list = [None] * len(params_list)
     for skey, idxs in groups.items():
         pts = [params_list[i] for i in idxs]
         P, R = len(pts), n_replicas
         steps = max_steps or max(default_max_steps(p) for p in pts)
         chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, steps)
+        P_run, R_run = (_next_pow2(P), _next_pow2(R)) if bucket else (P, R)
+        if bucket and max_steps is None:
+            # derived default budgets round up to whole chunks (rem
+            # statically 0 -> every such sweep shares one program); an
+            # *explicit* max_steps is still honored exactly — its
+            # remainder stays a static part of the signature, so pass a
+            # chunk multiple (or omit max_steps) for maximal sharing
+            steps = -(-steps // chunk) * chunk
         pv = jnp.stack([_params_vector(p) for p in pts])        # (P, 15)
-        pv_flat = jnp.repeat(pv, R, axis=0)                     # (P*R, 15)
+        if P_run != P:   # padding rows are inert (phase DONE); any finite
+            pv = jnp.pad(pv, ((0, P_run - P), (0, 0)))  # param row works
+        pv_flat = jnp.repeat(pv, R_run, axis=0)            # (P_run*R_run, 15)
         init_state = _initial_state_batch(pts, R, mr)
-        out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P, R,
-                           chunk, steps // chunk, steps % chunk, impl,
-                           early_exit, skey, init_state)
+        if (P_run, R_run) != (P, R):
+            init_state = _bucket_pad_state(init_state, P, R, P_run, R_run)
+        out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P_run, R_run,
+                           chunk, jnp.int32(steps // chunk), steps % chunk,
+                           impl, early_exit, skey, init_state)
         for j, i in enumerate(idxs):
-            results[i] = _extract(out, slice(j * R, (j + 1) * R))
+            rows = (slice(j * R_run, j * R_run + R) if R_run == R
+                    else np.arange(R) + j * R_run)
+            results[i] = _extract(out, rows, channels)
     return results

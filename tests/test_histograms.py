@@ -1,0 +1,214 @@
+"""Streaming histogram telemetry: cross-engine distribution agreement.
+
+The CTMC scan accumulates log-spaced run-duration / recovery / waiting
+histograms with no run-count bound; the event engine fills the identical
+bin layout from its per-run Python lists (the pure-numpy reference
+accumulator in ``core.histograms``).  These tests pin:
+
+  * exact-count invariants — every recorded run lands in exactly one bin,
+    so histogram totals equal ``n_runs`` even deep in the regime where
+    the ``max_run_records`` ring buffer truncates;
+  * cross-engine agreement — the event engine's empirical CDF and
+    percentiles match the CTMC histogram within bin resolution on pinned
+    seeds (the acceptance criterion: p50/p90/p99 within one bin width on
+    a 64-replica config whose run count overflows the ring buffer);
+  * spec plumbing — channel subsetting, ``histogram=None`` compiling the
+    accumulator out, and dict round trips.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MINUTES_PER_DAY as DAY
+from repro.core import (Histogram, HistogramSpec, OneWaySweep, Params,
+                        aggregate, histograms_from_arrays,
+                        histograms_from_results, run_replications, simulate)
+from repro.core.vectorized import simulate_ctmc
+
+#: pinned acceptance config: ~100 runs/replica >> max_run_records=16,
+#: so the ring buffer truncates and the histogram is the only unbounded
+#: distribution record
+BASE = Params(job_size=24, working_pool_size=32, spare_pool_size=4,
+              warm_standbys=2, job_length=2 * DAY,
+              random_failure_rate=2.0 / DAY, recovery_time=5.0,
+              auto_repair_time=30.0, manual_repair_time=120.0, seed=5,
+              max_run_records=16)
+
+
+# ---------------------------------------------------------------------------
+# exact-count invariants
+# ---------------------------------------------------------------------------
+
+def test_histogram_counts_equal_n_runs_under_ring_buffer_overflow():
+    out = simulate_ctmc(BASE, n_replicas=64, seed=2)
+    # the interesting regime: every replica overflowed the ring buffer
+    assert (out["n_runs"] > BASE.max_run_records).all()
+    per_replica = out["hist_run_duration"].sum(axis=1)
+    np.testing.assert_array_equal(per_replica, out["n_runs"])
+    # no bin count is negative and the grand total is exact
+    assert (out["hist_run_duration"] >= 0).all()
+    assert out["hist_run_duration"].sum() == out["n_runs"].sum()
+
+
+def test_recovery_and_waiting_counts_track_failures():
+    out = simulate_ctmc(BASE, n_replicas=64, seed=7)
+    rec = out["hist_recovery"].sum(axis=1)
+    wait = out["hist_waiting"].sum(axis=1)
+    # one downtime + one waiting record per *resolved* failure; a stall
+    # pending at scan end is the only failure that can be unrecorded
+    np.testing.assert_array_equal(rec, wait)
+    assert (rec <= out["n_failures"]).all()
+    done = out["completed"] > 0
+    assert done.any()
+    # a completed job cannot end stalled, so every failure was resolved
+    np.testing.assert_array_equal(rec[done], out["n_failures"][done])
+
+
+def test_run_duration_histogram_sums_to_useful_time_within_bins():
+    """Histogram mass sits in the right bins: reconstructing the total
+    from bin bounds brackets the exact recorded time."""
+    out = simulate_ctmc(BASE, n_replicas=32, seed=3)
+    h = histograms_from_arrays(out)["run_duration"]
+    lo = np.concatenate([[0.0], h.edges[:-1], [h.edges[-1]]])
+    recorded = (out["useful_work"] + out["lost_work"] - out["cur_run"]).sum()
+    assert (h.counts * lo).sum() <= recorded * (1 + 1e-5)
+    assert h.counts[-1] == 0, "no run can exceed the 19-year top edge here"
+    hi = np.concatenate([h.edges, [h.edges[-1]]])
+    assert (h.counts * hi).sum() >= recorded * (1 - 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cross-engine agreement (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_ctmc_histogram_percentiles_match_event_engine_within_one_bin():
+    """p50/p90/p99 of run duration from the CTMC histogram vs the event
+    engine's exact empirical percentiles, pinned seeds, ring buffer
+    overflowing — each within one bin width."""
+    out = simulate_ctmc(BASE, n_replicas=64, seed=2)
+    assert (out["n_runs"] > BASE.max_run_records).all()
+    h = histograms_from_arrays(out)["run_duration"]
+    pool = np.concatenate([r.run_durations for r in simulate(BASE, 64)])
+    assert len(pool) > 1000 and h.total > 1000
+    for q in (50, 90, 99):
+        emp = float(np.percentile(pool, q))
+        est = h.percentile(q)
+        assert abs(est - emp) <= h.bin_width_at(emp), (q, est, emp)
+
+
+def test_cross_engine_cdf_agreement_within_bin_resolution():
+    """Empirical (event) CDF vs CTMC histogram CDF over the shared bin
+    layout: sup distance at sampling-error scale, far below 1."""
+    out = simulate_ctmc(BASE, n_replicas=64, seed=2)
+    hc = histograms_from_arrays(out)
+    he = histograms_from_results(simulate(BASE, 64), BASE.histogram)
+    for ch in ("run_duration", "recovery"):
+        sup = np.abs(hc[ch].cdf() - he[ch].cdf()).max()
+        assert sup < 0.08, (ch, sup)
+    # both engines put the standby-swap zeros in the waiting underflow
+    wc, we = hc["waiting"], he["waiting"]
+    assert wc.counts[0] > 0 and we.counts[0] > 0
+    assert abs(wc.counts[0] / wc.total - we.counts[0] / we.total) < 0.08
+
+
+def test_dist_stats_surface_through_replications_both_engines():
+    rc = run_replications(BASE, 64, engine="ctmc")
+    re_ = run_replications(BASE.replace(job_length=0.5 * DAY), 8,
+                           engine="event")
+    for rep in (rc, re_):
+        assert set(rep.histograms) == set(BASE.histogram.channels)
+        for ch in BASE.histogram.channels:
+            st = rep.stats[f"{ch}_dist"]
+            assert np.isfinite(st.percentiles[50])
+            assert st.percentiles[99.9] >= st.percentiles[50]
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+SHORT = BASE.replace(job_length=0.25 * DAY)
+
+
+def test_channel_subsetting_filters_outputs():
+    p = SHORT.replace(histogram=HistogramSpec(channels=("run_duration",)))
+    out = simulate_ctmc(p, n_replicas=8, seed=1)
+    assert "hist_run_duration" in out and "hist_edges" in out
+    assert "hist_recovery" not in out and "hist_waiting" not in out
+    rep = run_replications(p, 8, engine="ctmc")
+    assert set(rep.histograms) == {"run_duration"}
+    assert "recovery_dist" not in rep.stats
+
+
+def test_histogram_none_compiles_accumulator_out():
+    p = SHORT.replace(histogram=None)
+    out = simulate_ctmc(p, n_replicas=8, seed=1)
+    assert not any(k.startswith("hist") for k in out)
+    on = simulate_ctmc(SHORT, n_replicas=8, seed=1)
+    # recording never perturbs the trajectory itself
+    np.testing.assert_array_equal(out["n_failures"], on["n_failures"])
+    np.testing.assert_array_equal(out["total_time"], on["total_time"])
+    rep = run_replications(p, 8, engine="ctmc")
+    assert rep.histograms == {}
+    assert "run_duration_dist" not in rep.stats
+
+
+def test_spec_round_trips_through_params_dict():
+    p = BASE.replace(histogram=HistogramSpec(low=0.5, high=1e5, n_bins=32,
+                                             channels=["run_duration"]))
+    q = Params.from_dict(p.to_dict())
+    assert q.histogram == p.histogram
+    assert isinstance(q.histogram.channels, tuple)
+    assert Params.from_dict(BASE.replace(histogram=None).to_dict()) \
+        .histogram is None
+
+
+def test_mixed_spec_grid_rejected_on_ctmc_sweep():
+    """The batch shares one in-scan accumulator layout, so a grid mixing
+    histogram specs must be rejected loudly, never silently resolved to
+    the first point's spec."""
+    from repro.core.vectorized import simulate_ctmc_sweep
+
+    for other in (None, HistogramSpec(n_bins=16)):
+        grid = [SHORT, SHORT.replace(histogram=other)]
+        with pytest.raises(ValueError, match="same\\s+Params.histogram"):
+            simulate_ctmc_sweep(grid, n_replicas=4, max_steps=64)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="0 < low < high"):
+        Params(histogram=HistogramSpec(low=10.0, high=1.0)).validate()
+    with pytest.raises(ValueError, match="n_bins"):
+        Params(histogram=HistogramSpec(n_bins=0)).validate()
+    with pytest.raises(ValueError, match="unknown histogram channels"):
+        Params(histogram=HistogramSpec(channels=("ettf",))).validate()
+
+
+def test_sweep_rows_carry_percentile_columns(tmp_path):
+    sweep = OneWaySweep("h", "recovery_time", [5.0, 15.0],
+                        n_replications=8, base_params=BASE.replace(
+                            job_length=0.25 * DAY))
+    res = sweep.run()
+    row = res.to_rows()[0]
+    for ch in ("run_duration", "recovery", "waiting"):
+        for q in (50, 90, 99):
+            assert f"{ch}_p{q}" in row
+    assert row["run_duration_p50"] > 0
+    path = str(tmp_path / "h.csv")
+    res.write_csv(path)
+    with open(path) as f:
+        header = f.readline()
+    assert "run_duration_p99" in header and "recovery_p50" in header
+
+
+def test_event_engine_histograms_via_aggregate():
+    results = simulate(BASE.replace(job_length=0.5 * DAY), 4)
+    stats = aggregate(results, histogram=BASE.histogram)
+    # per-failure downtime records exist and include the recovery reload
+    assert all(len(r.recovery_durations) == r.n_failures for r in results)
+    assert all(len(r.waiting_durations) == r.n_failures for r in results)
+    assert all(min(r.recovery_durations, default=BASE.recovery_time)
+               >= BASE.recovery_time - 1e-9 for r in results)
+    assert stats["recovery_dist"].percentiles[50] >= BASE.recovery_time - 1e-9
+    # without a spec, aggregate stays dist-free (backwards compatible)
+    assert "recovery_dist" not in aggregate(results)

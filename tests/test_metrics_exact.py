@@ -140,6 +140,39 @@ def test_event_engine_reports_zero_truncation():
     assert stats["run_duration_truncated"].mean == 0.0
 
 
+def test_stat_of_empty_sequence_is_nan_filled_not_raising():
+    """Empty inputs (empty sweeps, zero recorded runs) must produce a
+    well-formed NaN Stat instead of raising from np.percentile, and the
+    downstream CI helper must stay finite."""
+    from repro.core.metrics import Stat, _PERCENTILES
+
+    s = Stat.of([])
+    for v in (s.mean, s.median, s.std, s.minimum, s.maximum):
+        assert np.isnan(v)
+    assert set(s.percentiles) == set(_PERCENTILES)
+    assert all(np.isnan(v) for v in s.percentiles.values())
+    assert s.ci95_halfwidth(0) == 0.0
+    assert s.ci95_halfwidth(10) == 0.0   # NaN std -> 0, not NaN
+    # singletons: well-defined with zero spread
+    one = Stat.of([5.0])
+    assert one.mean == 5.0 and one.std == 0.0 and one.ci95_halfwidth(1) == 0.0
+
+
+def test_stat_from_empty_histogram_is_nan_filled():
+    from repro.core.histograms import Histogram, HistogramSpec
+    from repro.core.metrics import Stat
+
+    s = Stat.from_histogram(Histogram(HistogramSpec()))
+    assert np.isnan(s.mean) and np.isnan(s.percentiles[99.9])
+    assert s.ci95_halfwidth(4) == 0.0
+
+
+def test_aggregate_of_zero_replications_is_nan_not_error():
+    stats = aggregate([])
+    assert np.isnan(stats["total_time"].mean)
+    assert np.isnan(stats["run_duration_pooled"].percentiles[99])
+
+
 def test_fallback_approximation_for_foreign_arrays():
     """Arrays without run records (foreign producers) still aggregate,
     via the documented legacy approximation."""

@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (MINUTES_PER_DAY, ClusterSimulation, Params,
                         expected_failures, simulate_one)
+from repro.core.histograms import Histogram, HistogramSpec
 from repro.core.server import ServerState
 
 DAY = MINUTES_PER_DAY
@@ -167,6 +168,91 @@ def test_padded_sweep_bit_identical_same_structure(job, warm, seed):
     for i, (a, b) in enumerate(zip(pad, ref)):
         for k in a:
             np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"point {i} metric {k}")
+
+
+# ---------------------------------------------------------------------------
+# streaming histogram accumulator (pure-numpy reference)
+# ---------------------------------------------------------------------------
+
+_spec = st.builds(
+    lambda low, span, bins: HistogramSpec(low=low, high=low * span,
+                                          n_bins=bins),
+    st.floats(1e-3, 10.0), st.floats(10.0, 1e6), st.integers(1, 64))
+
+_values = st.lists(st.floats(0.0, 1e8, allow_nan=False), max_size=200)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_spec, _values, st.integers(1, 5))
+def test_histogram_merge_associative_commutative(spec, values, n_chunks):
+    """Accumulation order across replica chunks never matters: any
+    chunking + merge order equals one-shot accumulation."""
+    whole = Histogram.from_values(spec, values)
+    chunks = [values[i::n_chunks] for i in range(n_chunks)]
+    parts = [Histogram.from_values(spec, c) for c in chunks]
+    fold_fwd = parts[0]
+    for p in parts[1:]:
+        fold_fwd = fold_fwd.merge(p)
+    fold_rev = parts[-1]
+    for p in reversed(parts[:-1]):
+        fold_rev = p.merge(fold_rev)        # flipped operand order too
+    np.testing.assert_array_equal(whole.counts, fold_fwd.counts)
+    np.testing.assert_array_equal(whole.counts, fold_rev.counts)
+    assert whole.total == len(values)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_spec, _values)
+def test_histogram_cdf_monotone_and_percentiles_ordered(spec, values):
+    h = Histogram.from_values(spec, values)
+    cdf = h.cdf()
+    assert (np.diff(cdf) >= -1e-12).all()
+    if values:
+        assert cdf[-1] == pytest.approx(1.0)
+        qs = [h.percentile(q) for q in (10, 50, 90, 99, 99.9)]
+        assert all(a <= b + 1e-12 for a, b in zip(qs, qs[1:]))
+        assert h.minimum() <= h.maximum()
+
+
+@settings(max_examples=50, deadline=None)
+@given(_spec, st.integers(0, 1000))
+def test_histogram_bin_edges_left_closed_right_open(spec, i):
+    """A value exactly on edge k lands deterministically in the bin that
+    edge *opens* (counts slot k+1), never the one it closes."""
+    edges = spec.edges()
+    k = i % len(edges)
+    h = Histogram.from_values(spec, [edges[k]])
+    assert h.counts[k + 1] == 1.0
+    assert h.counts.sum() == 1.0
+    # and a value epsilon below stays in the closing bin
+    below = np.nextafter(edges[k], 0.0)
+    h2 = Histogram.from_values(spec, [below])
+    assert h2.counts[k] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed CTMC sweeps: real rows identical to unbucketed
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(1, 5), st.integers(3, 20), st.integers(0, 1000))
+def test_bucketed_sweep_value_identical_on_real_rows(n_points, n_rep, seed):
+    """Power-of-two padding points/replicas and the traced chunk count
+    must leave every real row bit-identical for any (P, R, seed)."""
+    from repro.core.vectorized import simulate_ctmc_sweep
+
+    base = _ctmc_base(6, 2, 1)
+    grid = [base.replace(recovery_time=4.0 + 2.0 * i)
+            for i in range(n_points)]
+    a = simulate_ctmc_sweep(grid, n_replicas=n_rep, seed=seed,
+                            max_steps=256, bucketed=True)
+    b = simulate_ctmc_sweep(grid, n_replicas=n_rep, seed=seed,
+                            max_steps=256, bucketed=False)
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert set(x) == set(y)
+        for k in x:
+            np.testing.assert_array_equal(x[k], y[k],
                                           err_msg=f"point {i} metric {k}")
 
 
