@@ -36,17 +36,24 @@ print(f"preemptions     : {stats['n_preemptions'].mean:8.1f}")
 print(f"overhead        : {stats['overhead_fraction'].mean * 100:8.2f} %")
 
 # ---------------------------------------------------------------------------
-# 2. a one-way sweep (the paper's §III-D API)
+# 2. a one-way sweep (the paper's §III-D API) under a bathtub hazard
 # ---------------------------------------------------------------------------
-sweep = OneWaySweep("Systematic Failure Fraction",
+# age-dependent failures (infant mortality + wear-out) are one Params
+# switch, and engine="auto" still takes the vectorized fast path — the
+# sweep compiles to a single XLA program (see docs/distributions.md)
+bathtub = params.replace(
+    failure_distribution="bathtub",
+    distribution_kwargs={"infant_factor": 5.0, "infant_tau": 7 * MINUTES_PER_DAY})
+sweep = OneWaySweep("Systematic Failure Fraction (bathtub hazard)",
                     "systematic_failure_fraction", [0.1, 0.15, 0.2, 0.3],
-                    n_replications=3, base_params=params)
+                    n_replications=3, base_params=bathtub, engine="auto")
 result = sweep.run()
-print("\n=== one-way sweep: systematic failure fraction ===")
-for row in result.to_rows():
+print("\n=== one-way sweep: systematic failure fraction, bathtub hazard ===")
+for point, row in zip(result.points, result.to_rows()):
     print(f"  fraction={row['systematic_failure_fraction']:<5} "
           f"total={row['total_time'] / 60:7.1f} h  "
           f"failures={row['n_failures']:6.1f}  "
-          f"(ci95 +-{row['total_time_ci95'] / 60:.1f} h)")
+          f"(ci95 +-{row['total_time_ci95'] / 60:.1f} h)  "
+          f"[engine={point.engine}]")
 result.write_csv("results/quickstart_sweep.csv")
 print("wrote results/quickstart_sweep.csv")

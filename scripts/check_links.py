@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs suite (no network, no deps).
+
+Scans the repo's tracked markdown (README.md, docs/, ROADMAP.md, ...)
+for inline links/images ``[text](target)`` and verifies that every
+*relative* target resolves to an existing file or directory, including
+the file half of ``path#anchor`` targets.  External schemes
+(https/mailto) and bare in-page anchors are skipped — this guard is
+about the docs suite never pointing at moved/renamed repo files, which
+is the failure mode that actually happens here.
+
+    python scripts/check_links.py          # exits 1 on any broken link
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: the *maintained* documentation set.  PAPER.md / PAPERS.md /
+#: SNIPPETS.md are retrieval artifacts (they carry dangling figure refs
+#: from the source material) and are deliberately out of scope.
+MD_GLOBS = ("README.md", "ROADMAP.md", "CHANGES.md", "ISSUE.md",
+            "docs/*.md")
+
+#: inline markdown link or image: [text](target) — stops at the first
+#: unescaped ')', which is fine for the plain paths used in this repo
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_links(md_path: Path):
+    for n, line in enumerate(md_path.read_text().splitlines(), 1):
+        for m in _LINK.finditer(line):
+            yield n, m.group(1)
+
+
+def check(md_path: Path) -> list:
+    broken = []
+    for n, target in iter_links(md_path):
+        if target.startswith(_SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md_path.parent / rel).exists():
+            broken.append((md_path.relative_to(ROOT), n, target))
+    return broken
+
+
+def main() -> int:
+    files = sorted({p for g in MD_GLOBS for p in ROOT.glob(g)})
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    broken = [b for f in files for b in check(f)]
+    for path, line, target in broken:
+        print(f"BROKEN LINK {path}:{line}: ({target})", file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(broken)} broken relative links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,11 +14,24 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # installed, so the tier-1 pass is reproducible run to run
 python -m pytest -x -q -p no:randomly
 
-# ordering-independence check (--lf-safe): the distribution/bucketing
-# suites must pass rerun standalone with a cold pytest cache — exactly
-# what a `pytest --lf` retry after a failure would execute
+# public-API doctests: the runnable examples in the core docstrings
+# (Params, HistogramSpec, run_replications_batch, the sweep classes,
+# vectorized.supports) are executable documentation — they fail here
+# the moment the API drifts from what docs/ promises
+python -m pytest -q -p no:randomly -p no:cacheprovider --doctest-modules \
+    src/repro/core/params.py src/repro/core/histograms.py \
+    src/repro/core/backend.py src/repro/core/sweeps.py \
+    src/repro/core/vectorized.py src/repro/core/hazards.py
+
+# docs suite link check: every relative markdown link in README/docs
+# must resolve to a real file (no network; scheme links are skipped)
+python scripts/check_links.py
+
+# ordering-independence check (--lf-safe): the distribution/bucketing/
+# non-exponential suites must pass rerun standalone with a cold pytest
+# cache — exactly what a `pytest --lf` retry after a failure would run
 python -m pytest -q -p no:randomly -p no:cacheprovider \
-    tests/test_histograms.py tests/test_bucketing.py
+    tests/test_histograms.py tests/test_bucketing.py tests/test_nonexp.py
 
 # compile-count smokes: a tiny mixed-structure grid must compile exactly
 # one XLA program per padded group, and two same-bucket sweeps of

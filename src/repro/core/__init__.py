@@ -14,7 +14,12 @@ implemented as a composable library:
   * :mod:`sweeps`        — OneWaySweep / TwoWaySweep experiment harness
   * :mod:`analytical`    — closed-form cross-checks + Young/Daly cadence
   * :mod:`vectorized`    — JAX CTMC engine for massive parameter sweeps
+  * :mod:`hazards`       — non-exponential hazard math for the fast path
+  * :mod:`histograms`    — streaming distribution telemetry (both engines)
   * :mod:`backend`       — engine dispatch (auto | event | ctmc)
+
+The docs suite (docs/architecture.md, docs/engines.md,
+docs/distributions.md) maps these layers and their parity guarantees.
 """
 
 from . import bathtub as _bathtub  # noqa: F401  (registers "bathtub" dist)
@@ -32,7 +37,9 @@ from .distributions import (Deterministic, Distribution, Exponential,
 from .backend import (Replications, resolve_engine, run_replications,
                       run_replications_batch)
 from .engine import Environment, Event, Interrupt, Process, Timeout
-from .histograms import HIST_CHANNELS, Histogram, HistogramSpec
+from .hazards import hazard_kind
+from .histograms import (HIST_CHANNELS, Histogram, HistogramSpec,
+                         percentiles_per_row)
 from .metrics import (RunResult, Stat, aggregate, aggregate_arrays,
                       histograms_from_arrays, histograms_from_results,
                       summarize)
@@ -49,8 +56,9 @@ __all__ = [
     "Process", "Replications", "RunResult", "Stat", "SweepResult", "Timeout",
     "TraceEvent", "Tracer", "TwoWaySweep", "Weibull", "aggregate",
     "aggregate_arrays", "cluster_failure_rate", "expected_failures",
-    "expected_total_time", "histograms_from_arrays",
+    "expected_total_time", "hazard_kind", "histograms_from_arrays",
     "histograms_from_results", "load_experiment", "make_distribution",
+    "percentiles_per_row",
     "paper_table1_defaults", "plan_checkpoints", "register_distribution",
     "repair_shop_occupancy", "resolve_engine", "run_replications",
     "run_replications_batch", "simulate", "simulate_multijob", "simulate_one",

@@ -6,14 +6,15 @@ AIReSim has two engines with one statistical contract:
     Exact for every feature (retirement, bad-set regeneration, arbitrary
     distributions, checkpoint rollback), one trajectory at a time.
   * ``ctmc``  — the vectorized JAX engine (:mod:`repro.core.vectorized`).
-    Exact only for the paper's default exponential model (see
-    ``vectorized.supports``), but simulates thousands of replicas — and,
-    via :func:`run_replications_batch`, whole sweep grids, including
+    Covers the paper's exponential model *and* the age-dependent Weibull
+    / bathtub failure families (see ``vectorized.supports`` and
+    docs/distributions.md), simulating thousands of replicas — and, via
+    :func:`run_replications_batch`, whole sweep grids, including
     *structural* grids over job_size / pool sizes / warm_standbys — as a
-    single compiled XLA program (structure padding; see the vectorized
-    module docstring).  Run-duration statistics are exact on both
-    engines: the CTMC scan records per-run intervals in a ring buffer
-    sized by ``Params.max_run_records``.
+    single compiled XLA program per hazard family (structure padding;
+    see the vectorized module docstring).  Run-duration statistics are
+    exact on both engines: the CTMC scan records per-run intervals in a
+    ring buffer sized by ``Params.max_run_records``.
 
 ``engine="auto"`` (the default everywhere) picks ``ctmc`` whenever the
 parameters are inside its supported envelope and silently falls back to
@@ -50,7 +51,8 @@ def resolve_engine(params: Params, engine: str = "auto") -> str:
     if engine == "ctmc" and not vectorized.supports(params):
         raise ValueError(
             "engine='ctmc' requested but these Params are outside the CTMC "
-            "envelope (non-exponential distributions, retirement, bad-set "
+            "envelope (failure distribution not exponential/weibull/"
+            "bathtub, non-exponential repairs, retirement, bad-set "
             "regeneration, checkpoint_interval > 0, or failing standbys); "
             "use engine='auto' to fall back to the event engine")
     return engine
@@ -136,6 +138,21 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
     ``progress(i)`` is invoked when work on grid point ``i`` starts:
     once per point as the sequential event engine reaches it, and for
     all batched CTMC points up front (they genuinely start together).
+
+    A failure-free grid finishes in exactly host-selection + job time,
+    which makes the routing observable:
+
+    >>> from repro.core import Params, run_replications_batch
+    >>> calm = Params(job_size=2, working_pool_size=3, spare_pool_size=1,
+    ...               warm_standbys=0, job_length=10.0,
+    ...               random_failure_rate=0.0, systematic_failure_rate=0.0,
+    ...               histogram=None)
+    >>> reps = run_replications_batch(
+    ...     [calm, calm.replace(job_length=20.0)], n=2, engine="event")
+    >>> [round(r.stats["total_time"].mean, 1) for r in reps]  # +3.0 select
+    [13.0, 23.0]
+    >>> [r.engine for r in reps]
+    ['event', 'event']
     """
     params_list = list(params_list)
     chosen = [resolve_engine(p, engine) for p in params_list]

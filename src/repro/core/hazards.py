@@ -1,0 +1,236 @@
+"""Hazard models for the vectorized CTMC engine's non-exponential fast path.
+
+The event engine samples non-exponential failures by drawing one fresh
+time-to-failure per running server at every compute-phase start
+(:class:`repro.core.server.FailureSampler` — the paper's "failure process
+starts when a job is started on a server").  The minimum of ``n`` iid
+draws from a distribution with per-server hazard ``h(t)`` is a single
+first-passage time with hazard ``n * h(t)`` where ``t`` is the *phase
+age* (time computed since the last restart) — so the whole fleet's
+failure process collapses to one age-indexed intensity per health class.
+That is the state the vectorized scan carries: one ``age`` scalar per
+replica, advancing through COMPUTE intervals and resetting to zero
+whenever the job (re)starts.
+
+Two sampling mechanisms cover the supported families:
+
+* **Weibull** — closed-form conditional inversion.  All clocks share the
+  shape ``k``, so the combined cumulative hazard is ``H(t) = C * t**k``
+  with ``C = sum_i lam_i**-k`` over every active clock, and the
+  time-to-failure from age ``a`` conditional on survival is exactly
+
+      s = (a**k + E / C) ** (1/k) - a,   E ~ Exp(1).
+
+  No thinning is needed (and none would work: the ``k < 1``
+  infant-mortality hazard diverges at age zero, so no finite majorant
+  exists there).  The sampled ``s`` enters the event race as a
+  deterministic residual; the failing class is then drawn categorically
+  from the per-class hazard weights, which are age-independent because
+  every clock shares the same ``t**(k-1)`` time profile.
+
+* **Bathtub** (:mod:`repro.core.bathtub`) — piecewise-constant hazard
+  majorization with Ogata-style thinning.  The bathtub hazard factors as
+  ``rate * g(t)`` with the dimensionless shape ``g`` shared by the
+  random and systematic clocks, and ``g`` is convex (decaying
+  exponential + constant + hinge), so its supremum over any age window
+  ``[a, a + W]`` is attained at an endpoint:
+  ``g_bar = max(g(a), g(a + W))``.  Each scan step scales the
+  exponential failure propensities by ``g_bar``, races them with a
+  window-expiry timer ``W`` (a *phantom* event that merely re-anchors
+  the majorant), and accepts a winning failure candidate with
+  probability ``g(a + dt) / g_bar`` — rejected candidates are phantoms
+  too.  Validity needs exactly ``g_bar >= g`` on ``[a, a + W]``, which
+  the convexity argument gives for every parameterization.
+
+Host-side helpers here build the per-point hazard parameter columns that
+ride along the traced ``(P, 15 + N_HAZARD_COLS)`` parameter matrix, and
+the JAX helpers evaluate ``g`` / the Weibull inversion inside the
+compiled step.  ``hazard_kind`` is the single source of truth for which
+families :func:`repro.core.vectorized.supports` accepts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bathtub import Bathtub
+from .distributions import Weibull, failure_distribution
+from .params import Params
+
+#: failure-distribution families the vectorized engine can run.  The
+#: kind is a *static* compile-time switch: each family compiles its own
+#: step program (exponential keeps the exact pre-existing one).
+HAZARD_KINDS = ("exponential", "weibull", "bathtub")
+
+#: hazard parameter columns appended to the 15 base parameter columns.
+#: Interpretation depends on the (static) hazard kind:
+#:   weibull : [C_rand, C_sys, k, 0, 0]        C = lam**-k per clock
+#:   bathtub : [infant_factor, infant_tau, wear_start, wear_tau, window]
+#:   exponential : all zeros (unused)
+N_HAZARD_COLS = 5
+
+#: fraction of the fastest bathtub time constant used as the thinning
+#: window W: small enough that the endpoint majorant stays tight
+#: (rejection fraction ~W/tau), large enough that window-expiry phantom
+#: events are rare next to real cluster events.
+BATHTUB_WINDOW_FRACTION = 0.25
+
+
+def _build_distribution(params: Params, rate: float):
+    """The event engine's own distribution object for this failure clock.
+
+    Going through the registry factory keeps every kwarg default in ONE
+    place (the :class:`Weibull` / :class:`Bathtub` dataclasses): if a
+    default is ever retuned there, both engines move together instead of
+    the fast path keeping a stale copy.  Returns None when construction
+    fails — dispatch treats that as unsupported.
+    """
+    try:
+        return failure_distribution(params.failure_distribution, rate,
+                                    **params.distribution_kwargs)
+    except (ValueError, TypeError):
+        return None
+
+
+def hazard_kind(params: Params) -> Optional[str]:
+    """The vectorized engine's hazard family for these Params, or None.
+
+    None means the failure distribution is outside the fast path
+    (lognormal, deterministic, user-registered — including a
+    re-registered "weibull"/"bathtub" name that no longer builds the
+    expected class) and the event engine must run it.  Degenerate
+    parameters (``k <= 0``, non-positive taus, ``infant_factor < 1``,
+    which would break the ``g >= 1`` acceptance-probability bound) also
+    return None rather than raising.
+    """
+    name = params.failure_distribution.lower()
+    if name == "exponential":
+        return "exponential"
+    if name not in ("weibull", "bathtub"):
+        return None
+    dist = _build_distribution(params, params.random_failure_rate)
+    if isinstance(dist, Weibull):
+        return "weibull" if dist.k > 0 else None
+    if isinstance(dist, Bathtub):
+        ok = (dist.infant_factor >= 1.0 and dist.infant_tau > 0
+              and dist.wear_tau > 0)
+        return "bathtub" if ok else None
+    return None
+
+
+def _weibull_clock_coeff(w: Weibull) -> float:
+    """``lam**-k`` for a mean-parameterized Weibull clock; 0 for a
+    disabled clock (infinite mean, i.e. zero rate)."""
+    if not math.isfinite(w.mean_value) or w.mean_value <= 0.0:
+        return 0.0
+    lam = w.mean_value / math.gamma(1.0 + 1.0 / w.k)
+    return lam ** -w.k
+
+
+def hazard_columns(params: Params) -> np.ndarray:
+    """Per-point hazard parameter columns (traced inputs), host-side.
+
+    Shape ``(N_HAZARD_COLS,)`` float32; see the column legend on
+    :data:`N_HAZARD_COLS`.  Values are read off the same distribution
+    objects the event engine samples from, never from re-stated kwarg
+    defaults.
+    """
+    kind = hazard_kind(params)
+    cols = np.zeros(N_HAZARD_COLS, np.float32)
+    if kind == "weibull":
+        w_rand = _build_distribution(params, params.random_failure_rate)
+        w_sys = _build_distribution(params, params.systematic_failure_rate)
+        cols[0] = _weibull_clock_coeff(w_rand)
+        cols[1] = _weibull_clock_coeff(w_sys)
+        cols[2] = w_rand.k
+    elif kind == "bathtub":
+        bt = _build_distribution(params, params.random_failure_rate)
+        cols[0] = bt.infant_factor
+        cols[1] = bt.infant_tau
+        cols[2] = bt.wear_start
+        cols[3] = bt.wear_tau
+        cols[4] = BATHTUB_WINDOW_FRACTION * min(bt.infant_tau, bt.wear_tau)
+    return cols
+
+
+def effective_event_rate(params: Params) -> float:
+    """Cluster failure-event rate estimate for step budgeting (host-side).
+
+    Because every failure clock restarts at each compute-phase start,
+    the phase age rarely leaves the early part of the hazard curve when
+    phases are short — so the *age-zero-ish* hazard, not the long-run
+    mean rate, governs how many events a job generates:
+
+    * weibull — the exact mean phase length is
+      ``Gamma(1 + 1/k) * C**(-1/k)`` (the min of the fleet's clocks is
+      itself Weibull); the budget uses its reciprocal.
+    * bathtub — the hazard at age zero is ``infant_factor`` times the
+      flat rate; the mean-rate estimate scales accordingly (an upper
+      bound, which is the safe direction for a step budget).
+    * exponential — the paper's ``expected_failures_per_minute``.
+    """
+    kind = hazard_kind(params)
+    lam = params.expected_failures_per_minute()
+    if kind == "weibull":
+        cols = hazard_columns(params)
+        c_rand, c_sys, k = float(cols[0]), float(cols[1]), float(cols[2])
+        n_bad = params.systematic_failure_fraction * params.job_size
+        C = params.job_size * c_rand + n_bad * c_sys
+        if C <= 0.0:
+            return 0.0
+        mean_phase = math.gamma(1.0 + 1.0 / k) * C ** (-1.0 / k)
+        return 1.0 / max(mean_phase, 1e-12)
+    if kind == "bathtub":
+        return lam * float(hazard_columns(params)[0])   # g(0) ~ infant_factor
+    return lam
+
+
+def phantom_steps(params: Params) -> int:
+    """Extra scan steps budgeted for thinning phantoms (host-side).
+
+    Bathtub thinning fires a window-expiry phantom at most every ``W``
+    compute minutes plus a rejected candidate per accepted one in the
+    worst case; Weibull inversion is phantom-free.
+    """
+    if hazard_kind(params) != "bathtub":
+        return 0
+    cols = hazard_columns(params)
+    window = float(cols[4])
+    if window <= 0.0:
+        return 0
+    return int(params.job_length / window) + 1
+
+
+# ---------------------------------------------------------------------------
+# JAX-side hazard math (used inside the compiled scan step)
+# ---------------------------------------------------------------------------
+
+def bathtub_shape(t, infant_factor, infant_tau, wear_start, wear_tau):
+    """Dimensionless bathtub hazard shape ``g(t) = h(t) / h_flat``.
+
+    Mirrors :meth:`repro.core.bathtub.Bathtub.hazard` exactly:
+    ``g(t) = 1 + (IF - 1) * exp(-t / tau_i) + relu(t - t_w) / tau_w``.
+    Convex in ``t``, and ``g >= 1`` everywhere (``IF >= 1`` is enforced
+    by :func:`hazard_kind`), so endpoint majorants and acceptance
+    probabilities are both well-defined.
+    """
+    g = 1.0 + (infant_factor - 1.0) * jnp.exp(-t / infant_tau)
+    return g + jnp.maximum(t - wear_start, 0.0) / wear_tau
+
+
+def weibull_conditional_ttf(age, C, k, exp_draw):
+    """Exact time-to-first-failure from phase age ``age``.
+
+    ``C`` is the summed ``lam**-k`` over all active clocks (zero when no
+    clock can fire), ``k`` the shared shape, ``exp_draw`` an Exp(1)
+    variate.  Returns +inf where ``C <= 0``.  Solves
+    ``C * ((age + s)**k - age**k) = E`` for ``s``.
+    """
+    safe_c = jnp.maximum(C, 1e-30)
+    target = jnp.power(age, k) + exp_draw / safe_c
+    s = jnp.power(target, 1.0 / k) - age
+    return jnp.where(C > 0.0, jnp.maximum(s, 0.0), jnp.inf)

@@ -53,6 +53,23 @@ class HistogramSpec:
       * ``waiting``      — replacement-acquisition delay alone (the ETTR
         minus the fixed recovery reload); 0 for standby swaps and
         undiagnosed failures, so mass in the underflow bin is expected.
+
+    Selecting a channel subset compiles the others *out* of the CTMC
+    scan state (smaller carry, fewer scatter lanes), not just out of the
+    reports; an empty tuple disables the accumulator like
+    ``Params(histogram=None)``.
+
+    >>> spec = HistogramSpec(low=1.0, high=100.0, n_bins=2,
+    ...                      channels=("run_duration",))
+    >>> spec.n_counts            # n_bins + underflow + overflow slots
+    4
+    >>> [round(float(e), 1) for e in spec.edges()]
+    [1.0, 10.0, 100.0]
+    >>> h = Histogram.from_values(spec, [0.5, 2.0, 3.0, 42.0, 1e6])
+    >>> [int(c) for c in h.counts]          # under, [1,10), [10,100), over
+    [1, 2, 1, 1]
+    >>> round(h.percentile(50), 2)          # exact to one bin width
+    7.75
     """
 
     low: float = 1e-2
@@ -230,3 +247,42 @@ class Histogram:
         return (f"Histogram(n_bins={len(self.edges) - 1}, "
                 f"total={self.total:.0f}, "
                 f"range=[{self.edges[0]:g}, {self.edges[-1]:g}))")
+
+
+def percentiles_per_row(edges: SpecOrEdges, counts_2d: np.ndarray,
+                        q: float) -> np.ndarray:
+    """Vectorized :meth:`Histogram.percentile` over a stack of histograms.
+
+    ``counts_2d`` is an ``(R, n_bins + 2)`` matrix of per-replica bin
+    counts (the CTMC engine's raw ``hist_{channel}`` output).  Returns
+    ``(R,)`` percentile estimates — bit-compatible with building one
+    :class:`Histogram` per row and calling ``percentile(q)``, which is
+    what the event-engine path does — with NaN for empty rows.  This is
+    the workhorse of the cross-replica dispersion statistics
+    (``{channel}_p99_replica``): per-replica tail percentiles whose
+    spread across replicas measures run-to-run variability, which the
+    pooled histogram (one merged distribution) cannot see.
+    """
+    edges = _as_edges(edges)
+    counts = np.asarray(counts_2d, np.float64)
+    if counts.ndim != 2 or counts.shape[1] != len(edges) + 1:
+        raise ValueError(
+            f"counts shape {counts.shape} does not match "
+            f"(R, {len(edges) + 1}) for {len(edges)} edges")
+    total = counts.sum(axis=1)
+    cum = np.cumsum(counts, axis=1)
+    target = q / 100.0 * total
+    i = np.sum(cum < target[:, None], axis=1)          # searchsorted left
+    i = np.minimum(i, counts.shape[1] - 1)
+    lo_edges = np.concatenate([[0.0], edges])          # slot lower bounds
+    hi_edges = np.concatenate([edges, [edges[-1]]])    # slot upper bounds
+    below = np.where(i > 0,
+                     np.take_along_axis(cum, np.maximum(i - 1, 0)[:, None],
+                                        axis=1)[:, 0], 0.0)
+    in_bin = np.take_along_axis(counts, i[:, None], axis=1)[:, 0]
+    frac = np.clip((target - below) / np.maximum(in_bin, 1e-30), 0.0, 1.0)
+    val = lo_edges[i] + frac * (hi_edges[i] - lo_edges[i])
+    # the overflow slot has no upper bound: report its lower edge, the
+    # same convention as Histogram.percentile
+    val = np.where(i == counts.shape[1] - 1, edges[-1], val)
+    return np.where(total > 0, val, np.nan)

@@ -16,7 +16,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .histograms import HIST_CHANNELS, Histogram, HistogramSpec
+from .histograms import (HIST_CHANNELS, Histogram, HistogramSpec,
+                         percentiles_per_row)
 
 
 @dataclass
@@ -91,6 +92,9 @@ _PERCENTILES = (25, 50, 75, 90, 99)
 #: histogram-backed stats add the deep tail (unbounded run counts make
 #: p99.9 meaningful); keys stay numeric for CSV column naming
 _HIST_PERCENTILES = (25, 50, 75, 90, 99, 99.9)
+#: the per-replica tail percentile whose cross-replica spread is
+#: surfaced as the ``{channel}_p99_replica`` dispersion Stat
+REPLICA_TAIL_PERCENTILE = 99
 
 
 @dataclass(frozen=True)
@@ -139,6 +143,16 @@ class Stat:
             maximum=h.maximum(),
             percentiles={p: h.percentile(p) for p in _HIST_PERCENTILES},
         )
+
+    @property
+    def iqr(self) -> float:
+        """Interquartile range (p75 - p25) — the robust spread measure
+        the dispersion stats (``{channel}_p99_replica``) are read with:
+        e.g. ``stats["recovery_p99_replica"].iqr`` is the IQR of
+        per-replica p99 ETTR across replicas."""
+        nan = float("nan")
+        return (self.percentiles.get(75, nan)
+                - self.percentiles.get(25, nan))
 
     def ci95_halfwidth(self, n: int) -> float:
         if n <= 1 or math.isnan(self.std):
@@ -190,8 +204,12 @@ def aggregate(results: Sequence[RunResult],
     With a :class:`HistogramSpec`, also reports ``{channel}_dist`` Stats
     (percentiles incl. p99.9, exact to one bin width) from the pooled
     per-run lists — the event-engine counterpart of the CTMC engine's
-    streaming histograms.  Callers that already pooled (the backend)
-    pass the prebuilt ``histograms`` dict to skip re-binning.
+    streaming histograms — plus ``{channel}_p99_replica`` dispersion
+    Stats: each replication's own p99 (binned through the same layout
+    the CTMC engine uses, so the stat is engine-comparable), aggregated
+    across replications; read the cross-replica IQR off ``.iqr``.
+    Callers that already pooled (the backend) pass the prebuilt
+    ``histograms`` dict to skip re-binning.
     """
     out: Dict[str, Stat] = {}
     for name in _SCALAR_METRICS:
@@ -209,6 +227,16 @@ def aggregate(results: Sequence[RunResult],
         histograms = histograms_from_results(results, histogram)
     for ch, h in histograms.items():
         out[f"{ch}_dist"] = Stat.from_histogram(h)
+        # cross-replica dispersion: each replication's own p99,
+        # estimated through the same bin layout the CTMC engine uses so
+        # the stat means the same thing on both engines
+        per = []
+        for r in results:
+            vals = getattr(r, _CHANNEL_SOURCES[ch])
+            if vals:
+                per.append(Histogram.from_values(h.edges, vals)
+                           .percentile(REPLICA_TAIL_PERCENTILE))
+        out[f"{ch}_p{REPLICA_TAIL_PERCENTILE}_replica"] = Stat.of(per)
     return out
 
 
@@ -241,7 +269,11 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray],
     ``{channel}_dist`` Stats whose percentiles are exact to one bin width
     with **no** run-count bound — the trustworthy distribution source
     whenever ``run_duration_truncated`` is nonzero.  A prebuilt
-    ``histograms`` dict (the backend's) skips re-pooling.
+    ``histograms`` dict (the backend's) skips re-pooling.  The raw
+    per-replica counts additionally yield ``{channel}_p99_replica``
+    dispersion Stats (each replica's own p99 via the vectorized
+    :func:`repro.core.histograms.percentiles_per_row`; ``.iqr`` is the
+    cross-replica IQR) — pooling first would erase that spread.
 
     Legacy fallback: arrays lacking the run-duration records (foreign
     producers) degrade to the old total_time/(n_failures+1)
@@ -299,6 +331,18 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray],
         histograms = histograms_from_arrays(arrays)
     for ch, h in histograms.items():
         out[f"{ch}_dist"] = Stat.from_histogram(h)
+    if "hist_edges" in arrays:
+        # cross-replica dispersion of distribution tails: vectorized
+        # per-replica percentiles straight from the raw (R, n_bins + 2)
+        # counts (pooling first would erase run-to-run spread)
+        edges = np.asarray(arrays["hist_edges"], np.float64)
+        for ch in HIST_CHANNELS:
+            key = f"hist_{ch}"
+            if key in arrays:
+                per = percentiles_per_row(edges, arrays[key],
+                                          REPLICA_TAIL_PERCENTILE)
+                out[f"{ch}_p{REPLICA_TAIL_PERCENTILE}_replica"] = Stat.of(
+                    per[np.isfinite(per)])
     return out
 
 

@@ -22,7 +22,35 @@ MINUTES_PER_DAY = 24 * 60
 
 @dataclass
 class Params:
-    """Input parameters for one cluster-reliability simulation."""
+    """Input parameters for one cluster-reliability simulation.
+
+    All of the paper's §III-B inputs under their own names, with Table-I
+    defaults; every time is in **minutes**.  Instances are plain
+    dataclasses: build one, tweak copies with :meth:`replace`, and hand
+    it to ``run_replications`` / the sweep classes (which route it to
+    the right engine — see docs/engines.md).
+
+    >>> p = Params(recovery_time=30.0, warm_standbys=32)
+    >>> p.validate()                       # raises ValueError on bad input
+    >>> p.replace(warm_standbys=8).warm_standbys   # copies, never mutates
+    8
+    >>> p.warm_standbys
+    32
+    >>> round(p.bad_failure_rate / p.random_failure_rate, 1)  # random + sys
+    6.0
+
+    Non-exponential failure processes are one switch (both engines
+    understand them; Weibull and bathtub stay on the fast path):
+
+    >>> bath = Params(failure_distribution="bathtub",
+    ...               distribution_kwargs={"infant_factor": 20.0})
+    >>> bath.validate()
+
+    Round trips for experiment files:
+
+    >>> Params.from_dict(p.to_dict()) == p
+    True
+    """
 
     # ---- failure model (paper inputs 1-2) --------------------------------
     random_failure_rate: float = 0.01 / MINUTES_PER_DAY

@@ -62,15 +62,30 @@ Event families (K_exp = 16): random failure x4 classes, systematic
 failure x4, auto-repair completion x4, manual completion x4.
 Deterministic (K_det = 2): job completion, recovery/host-selection timer.
 
+Non-exponential hazards: Weibull and bathtub failure processes run on
+this same fast path (``supports`` says yes; ``engine=auto`` dispatches
+here).  The scan carries a per-replica *phase age* — failure clocks
+restart whenever the job (re)starts, so every running server shares one
+age and the fleet's first failure is a single age-indexed intensity per
+health class (see :mod:`repro.core.hazards`).  Weibull failures are
+sampled by exact closed-form conditional inversion entering the event
+race as a deterministic residual; bathtub failures use piecewise-constant
+hazard majorization with Ogata-style thinning (accept/reject inside the
+compiled step, plus a window-expiry phantom timer).  The hazard family is
+a static compile switch: exponential grids keep the exact pre-existing
+program (same state, same uniform stream), and each family compiles one
+program per shape bucket.
+
 Known approximations vs the event-driven oracle (validated statistically
-in tests/test_vectorized.py):
+in tests/test_vectorized.py and tests/test_nonexp.py):
   * class-proportional sampling everywhere (exact under exchangeability);
   * misdiagnosis picks the wrong server proportionally over ALL running
     servers (the oracle excludes the failed one: O(1/4096) difference);
   * the initial bad-server split across pools uses its expectation.
 
 Out of scope (routed to core.simulation): retirement, bad-set
-regeneration, non-exponential distributions, failing standbys.
+regeneration, lognormal/deterministic/user-registered failure
+distributions, non-exponential repair distributions, failing standbys.
 """
 
 from __future__ import annotations
@@ -83,6 +98,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from . import hazards
+from .hazards import bathtub_shape, weibull_conditional_ttf
 from .histograms import HIST_CHANNELS
 from .params import Params
 
@@ -97,8 +114,31 @@ _METRICS = ("total_time", "n_failures", "n_random_failures",
 
 
 def supports(params: Params) -> bool:
-    """Can the CTMC engine simulate these params exactly?"""
-    return (params.failure_distribution.lower() == "exponential"
+    """Can the CTMC engine simulate these params exactly?
+
+    True for the paper's exponential baseline *and* the age-dependent
+    Weibull / bathtub failure families (sampled on the fast path via
+    conditional inversion / hazard thinning — see
+    :mod:`repro.core.hazards`).  Repair distributions must stay
+    exponential, and the event-engine-only extensions (retirement,
+    bad-set regeneration, checkpoint rollback, failing standbys) must be
+    off.  ``engine="auto"`` falls back to the event engine whenever this
+    returns False.
+
+    >>> from repro.core import Params
+    >>> supports(Params())                                    # Table-I default
+    True
+    >>> supports(Params(failure_distribution="weibull",
+    ...                 distribution_kwargs={"k": 1.5}))      # wear-out
+    True
+    >>> supports(Params(failure_distribution="bathtub"))
+    True
+    >>> supports(Params(failure_distribution="lognormal"))    # event engine
+    False
+    >>> supports(Params(retirement_threshold=3))
+    False
+    """
+    return (hazards.hazard_kind(params) is not None
             and params.repair_distribution.lower() == "exponential"
             and params.retirement_threshold == 0
             and params.bad_set_regeneration_period == 0
@@ -166,15 +206,21 @@ def _initial_state_batch(pts, R: int, max_runs: int) -> Dict[str, jnp.ndarray]:
     state["timer"] = jnp.full((B,), jnp.inf, jnp.float32)
     state["stall_start"] = jnp.zeros((B,), jnp.float32)
     state["phase"] = jnp.full((B,), COMPUTE, jnp.int32)
+    #: phase age: compute minutes since the job last (re)started — the
+    #: hazard clock of the non-exponential families (inert for
+    #: exponential, where the process is memoryless)
+    state["age"] = jnp.zeros((B,), jnp.float32)
     state["cur_run"] = jnp.zeros((B,), jnp.float32)
     state["n_runs"] = jnp.zeros((B,), jnp.int32)
     state["run_durations"] = jnp.zeros((B, max_runs), jnp.float32)
     spec = pts[0].histogram
-    if spec is not None:
-        # every channel is accumulated when histograms are on (fixed
-        # layout -> one compiled shape); spec.channels filters reporting.
-        # The grid shares the first point's bin layout.
-        state["hist"] = jnp.zeros((B, len(HIST_CHANNELS), spec.n_counts),
+    sel = _selected_channels(spec)
+    if sel:
+        # only the channels the spec selects are carried through the
+        # scan — unselected channels are compiled out of the state
+        # entirely (smaller carry + one fewer scatter lane).  The grid
+        # shares the first point's bin layout.
+        state["hist"] = jnp.zeros((B, len(sel), spec.n_counts),
                                   jnp.float32)
         state["hist_edges"] = jnp.asarray(spec.edges(), jnp.float32)
     for m in _METRICS:
@@ -184,6 +230,18 @@ def _initial_state_batch(pts, R: int, max_runs: int) -> Dict[str, jnp.ndarray]:
 
 #: state entries with no leading replica axis (scan-invariant constants)
 _UNBATCHED_STATE = ("hist_edges",)
+
+
+def _selected_channels(spec) -> tuple:
+    """Channels carried through the scan, in fixed HIST_CHANNELS order.
+
+    The tuple is part of the compiled program (it sizes the in-scan
+    accumulator), so it must be derived deterministically from the spec,
+    never from dict/set iteration order.
+    """
+    if spec is None:
+        return ()
+    return tuple(ch for ch in HIST_CHANNELS if ch in spec.channels)
 
 
 def _next_pow2(n: int) -> int:
@@ -244,54 +302,110 @@ def _onehot(c: jnp.ndarray) -> jnp.ndarray:
 # one transition
 # ---------------------------------------------------------------------------
 
+def _n_uniforms(kind: str) -> int:
+    """Uniform draws per step: the exponential program keeps its
+    original 8-wide stream bit-for-bit; the hazard families add one
+    (Exp(1) inversion draw for weibull, accept/reject for bathtub)."""
+    return 8 if kind == "exponential" else 9
+
+
 def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
-          impl: Optional[str]) -> Dict[str, jnp.ndarray]:
+          impl: Optional[str], kind: str = "exponential",
+          hist_channels: tuple = HIST_CHANNELS) -> Dict[str, jnp.ndarray]:
     R = s["t"].shape[0]
-    u = jax.random.uniform(key_t, (R, 8), minval=1e-12, maxval=1.0)
-    return _step_u(s, u, pv, impl)
+    u = jax.random.uniform(key_t, (R, _n_uniforms(kind)),
+                           minval=1e-12, maxval=1.0)
+    return _step_u(s, u, pv, impl, kind, hist_channels)
 
 
 def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
-            impl: Optional[str]) -> Dict[str, jnp.ndarray]:
+            impl: Optional[str], kind: str = "exponential",
+            hist_channels: tuple = HIST_CHANNELS) -> Dict[str, jnp.ndarray]:
     """One CTMC transition for a batch of replicas.
 
-    ``pv`` is either a single 15-vector shared by the whole batch or a
-    (B, 15) matrix with one parameter row per replica — the layout the
-    batched sweep uses after flattening the (points x replicas) grid.
+    ``pv`` is either a single parameter vector shared by the whole batch
+    or a (B, n_cols) matrix with one parameter row per replica — the
+    layout the batched sweep uses after flattening the (points x
+    replicas) grid.  Columns 0..14 are the base model parameters;
+    columns 15.. are the hazard-family columns whose interpretation the
+    *static* ``kind`` selects (see :mod:`repro.core.hazards`).
+
+    ``hist_channels`` is the static tuple of histogram channels the scan
+    state carries (must match ``s["hist"].shape[1]``).
     """
+    n_cols = 15 + hazards.N_HAZARD_COLS
     if pv.ndim == 1:
-        cols = [pv[i] for i in range(15)]
+        cols = [pv[i] for i in range(n_cols)]
         _c = lambda x: x            # param vs (B, 4) class arrays
     else:
-        cols = [pv[:, i] for i in range(15)]
+        cols = [pv[:, i] for i in range(n_cols)]
         _c = lambda x: x[:, None]
     (r_rand, r_sys, recovery, host_sel, waiting, auto_t, man_t,
      auto_fail, man_fail, p_auto, dp, du, ckpt, preempt_cost,
-     warm_standbys) = cols
+     warm_standbys) = cols[:15]
+    hz = cols[15:]
 
     u_time, u_pick, u_diag, u_wrong, u_cls, u_esc, u_succ, u_pool = (
         u[:, 0], u[:, 1], u[:, 2], u[:, 3], u[:, 4], u[:, 5], u[:, 6],
         u[:, 7])
+    u_haz = u[:, 8] if kind != "exponential" else None
 
     computing = s["phase"] == COMPUTE
     in_overhead = s["phase"] == OVERHEAD
     stalled = s["phase"] == STALL
     active = s["phase"] != DONE
+    age = s["age"]
 
     # ---- rates (R, 16) ------------------------------------------------
     run = s["run"]
     bad_mask = jnp.asarray([0.0, 1.0, 0.0, 1.0])
-    fail_rand = run * _c(r_rand) * computing[:, None]
-    fail_sys = run * bad_mask[None, :] * _c(r_sys) * computing[:, None]
+    haz_weights = g_bar = None
+    if kind == "weibull":
+        # exact conditional inversion: the fleet's combined cumulative
+        # hazard is C * age**k (all clocks share the shape k), so the
+        # time-to-first-failure enters the race as a deterministic
+        # residual and the failure channels carry no exponential rate.
+        # haz_weights holds the per-channel hazard shares (age-invariant
+        # because every clock shares the t**(k-1) profile) for the
+        # failing-class pick below.
+        c_rand, c_sys, w_k = hz[0], hz[1], hz[2]
+        w_rand = run * _c(c_rand) * computing[:, None]
+        w_sys = run * bad_mask[None, :] * _c(c_sys) * computing[:, None]
+        haz_weights = jnp.concatenate([w_rand, w_sys], axis=-1)  # (B, 8)
+        haz_resid = weibull_conditional_ttf(
+            age, haz_weights.sum(-1), w_k, -jnp.log(u_haz))
+        fail_rand = jnp.zeros_like(run)
+        fail_sys = jnp.zeros_like(run)
+    elif kind == "bathtub":
+        # Ogata thinning: scale the exponential failure propensities by
+        # the window majorant g_bar = max(g(age), g(age + W)) (valid by
+        # convexity of g) and race a window-expiry phantom timer W; a
+        # winning candidate is accepted below with prob g(age + dt)/g_bar.
+        b_if, b_ti, b_ws, b_tw, b_win = hz[0], hz[1], hz[2], hz[3], hz[4]
+        g_now = bathtub_shape(age, b_if, b_ti, b_ws, b_tw)
+        g_end = bathtub_shape(age + b_win, b_if, b_ti, b_ws, b_tw)
+        g_bar = jnp.maximum(g_now, g_end)
+        fail_rand = run * _c(r_rand) * g_bar[..., None] * computing[:, None]
+        fail_sys = run * bad_mask[None, :] * _c(r_sys) * g_bar[..., None] \
+            * computing[:, None]
+        haz_resid = jnp.where(computing, b_win * jnp.ones_like(age),
+                              jnp.inf)
+    else:
+        fail_rand = run * _c(r_rand) * computing[:, None]
+        fail_sys = run * bad_mask[None, :] * _c(r_sys) * computing[:, None]
+        haz_resid = None
     auto_rate = s["auto"] / jnp.maximum(_c(auto_t), 1e-9)
     man_rate = s["man"] / jnp.maximum(_c(man_t), 1e-9)
     rates = jnp.concatenate([fail_rand, fail_sys, auto_rate, man_rate],
                             axis=-1) * active[:, None]
 
-    residuals = jnp.stack([
+    resid_cols = [
         jnp.where(computing, s["work_left"], jnp.inf),
         jnp.where(in_overhead, s["timer"], jnp.inf),
-    ], axis=-1)
+    ]
+    if haz_resid is not None:
+        resid_cols.append(haz_resid)
+    residuals = jnp.stack(resid_cols, axis=-1)
 
     dt, ev = ops.event_race(rates, residuals, u_time, u_pick, impl=impl)
     dt = jnp.where(active & jnp.isfinite(dt), dt, 0.0)
@@ -299,6 +413,27 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     cls = (ev % 4).astype(jnp.int32)
     is_fail = active & (ev < 8)
     is_sys = active & (ev >= 4) & (ev < 8)
+    if kind == "weibull":
+        # the failure arrives on the hazard residual (K_EXP + 2); pick
+        # the failing channel from the hazard shares.  u_pick is only
+        # consumed by the race when an *exponential* channel wins, so it
+        # is fresh (and independent of dt) here.
+        total_w = jnp.maximum(haz_weights.sum(-1), 1e-30)
+        cdf8 = jnp.cumsum(haz_weights, axis=-1) / total_w[:, None]
+        pick8 = jnp.minimum(
+            jnp.sum((u_pick[:, None] >= cdf8).astype(jnp.int32), -1), 7)
+        haz_fail = active & (ev == K_EXP + 2)
+        is_fail = haz_fail
+        is_sys = haz_fail & (pick8 >= 4)
+        cls = jnp.where(haz_fail, pick8 % 4, cls).astype(jnp.int32)
+    elif kind == "bathtub":
+        # accept/reject: a rejected candidate (and the window-expiry
+        # event ev == K_EXP + 2) is a phantom — time and work advance,
+        # no state transition fires.
+        g_at = bathtub_shape(age + dt, hz[0], hz[1], hz[2], hz[3])
+        accept = u_haz * g_bar < g_at
+        is_fail = is_fail & accept
+        is_sys = is_sys & accept
     is_auto = active & (ev >= 8) & (ev < 12)
     is_man = active & (ev >= 12) & (ev < 16)
     is_complete = active & (ev == K_EXP)
@@ -348,6 +483,14 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
             jnp.where(record, run_val, kept))
     ns["n_runs"] = s["n_runs"] + record.astype(jnp.int32)
     ns["cur_run"] = jnp.where(record, 0.0, run_val)
+
+    # ---- phase age (hazard clock) ---------------------------------------
+    # advances only through COMPUTE time (phantoms included) and resets
+    # when the recovery timer restarts the job — the event engine's
+    # "failure clocks restart when the job restarts" semantics.  After a
+    # failure the phase is OVERHEAD/STALL, so the frozen age is never
+    # read before the reset.
+    ns["age"] = jnp.where(is_timer, 0.0, age + progress)
 
     # ---- failure handling ---------------------------------------------------
     f = is_fail.astype(jnp.float32)
@@ -453,11 +596,17 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         ended = resolves | to_stalled
         downtime = jnp.where(resolves, fail_timer, stall_wait + recovery)
         acquire_wait = jnp.where(resolves, fail_timer - recovery, stall_wait)
-        # one fused searchsorted + scatter-add for all three channels
-        # (HIST_CHANNELS order) — per-channel scatters triple the
-        # per-step accumulator cost
-        vals = jnp.stack([run_val, downtime, acquire_wait], axis=1)
-        masks = jnp.stack([record, ended, ended], axis=1)       # (B, 3)
+        # one fused searchsorted + scatter-add across the selected
+        # channels (static ``hist_channels``, HIST_CHANNELS order) —
+        # per-channel scatters multiply the per-step accumulator cost,
+        # and unselected channels are compiled out entirely
+        channel_vals = {"run_duration": (run_val, record),
+                        "recovery": (downtime, ended),
+                        "waiting": (acquire_wait, ended)}
+        vals = jnp.stack([channel_vals[ch][0] for ch in hist_channels],
+                         axis=1)
+        masks = jnp.stack([channel_vals[ch][1] for ch in hist_channels],
+                          axis=1)                       # (B, n_sel)
         idx = jnp.searchsorted(s["hist_edges"], vals, side="right")
         rows = jnp.arange(vals.shape[0])[:, None]
         chan = jnp.arange(vals.shape[1])[None, :]
@@ -471,21 +620,31 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _params_vector(p: Params) -> jnp.ndarray:
-    return jnp.asarray([
+    base = np.asarray([
         p.random_failure_rate, p.systematic_failure_rate, p.recovery_time,
         p.host_selection_time, p.waiting_time, p.auto_repair_time,
         p.manual_repair_time, p.auto_repair_failure_probability,
         p.manual_repair_failure_probability, p.automated_repair_probability,
         p.diagnosis_probability, p.diagnosis_uncertainty,
         p.checkpoint_interval, p.preemption_cost, float(p.warm_standbys),
-    ], jnp.float32)
+    ], np.float32)
+    return jnp.asarray(np.concatenate([base, hazards.hazard_columns(p)]))
 
 
 def default_max_steps(p: Params, safety: float = 2.0) -> int:
-    """Expected events (failures x ~3 repair/replace hops) + head-room."""
-    lam = p.expected_failures_per_minute()
+    """Expected events (failures x ~3 repair/replace hops) + head-room.
+
+    Hazard-aware: the event rate comes from
+    :func:`repro.core.hazards.effective_event_rate` (the age-zero-ish
+    hazard governs short restart-reset phases, so bathtub infant
+    mortality or Weibull wear-in can multiply the exponential estimate),
+    and bathtub thinning additionally budgets its window-expiry phantom
+    steps.
+    """
+    lam = hazards.effective_event_rate(p)
     horizon = p.job_length * (1.0 + lam * (p.recovery_time + 2.0))
-    return max(128, int(lam * horizon * 3.2 * safety))
+    steps = max(128, int(lam * horizon * 3.2 * safety))
+    return steps + int(hazards.phantom_steps(p) * safety)
 
 
 #: steps simulated per early-exit check (one compiled scan per chunk);
@@ -509,11 +668,13 @@ def _struct_key(p: Params):
             round(p.job_length, 3), round(p.host_selection_time, 3))
 
 
-@partial(jax.jit, static_argnames=("P", "R", "chunk", "rem",
-                                   "impl", "early_exit", "struct_key"))
+@partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "impl",
+                                   "early_exit", "struct_key", "kind",
+                                   "hist_channels"))
 def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
                  chunk: int, n_chunks, rem: int, impl: Optional[str],
-                 early_exit: bool, struct_key,
+                 early_exit: bool, struct_key, kind: str,
+                 hist_channels: tuple,
                  init_state: Dict[str, jnp.ndarray]):
     """Chunked scan with early exit; batch axis is B = P * R (point-major).
 
@@ -533,13 +694,14 @@ def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
     def scan_body(state, u):
         if P > 1:
             u = jnp.tile(u, (P, 1))
-        return _step_u(state, u, pv, impl), None
+        return _step_u(state, u, pv, impl, kind, hist_channels), None
 
     def run_chunk(state, i, n_steps):
         # one batched threefry call per chunk (a per-step split + draw is
-        # the dominant scan cost on CPU)
+        # the dominant scan cost on CPU); the non-exponential hazard
+        # families draw one extra uniform lane per step
         us = jax.random.uniform(jax.random.fold_in(key, i),
-                                (n_steps, R_draw, 8),
+                                (n_steps, R_draw, _n_uniforms(kind)),
                                 minval=1e-12, maxval=1.0)
         if R_draw != R:
             us = us[:, :R]
@@ -593,9 +755,10 @@ def compile_cache_size() -> Optional[int]:
 
 def _unsupported_error() -> ValueError:
     return ValueError(
-        "CTMC engine supports the default exponential AIReSim model "
-        "(no retirement / regeneration / non-exponential "
-        "distributions); use core.simulation.simulate instead")
+        "CTMC engine supports exponential, weibull, and bathtub failure "
+        "processes with exponential repairs (no retirement / "
+        "regeneration / checkpoint rollback / failing standbys / other "
+        "distribution families); use core.simulation.simulate instead")
 
 
 #: non-_METRICS outputs worth returning: completion flag + the exact
@@ -607,17 +770,17 @@ def _extract(state, sl=slice(None), channels=()) -> Dict[str, np.ndarray]:
     out = {k: np.asarray(v[sl]) for k, v in state.items()
            if k in _METRICS + _EXTRA_OUTPUTS}
     if "hist" in state and channels:
+        # the in-scan accumulator carries exactly the selected channels,
+        # in HIST_CHANNELS order
         hist = np.asarray(state["hist"][sl], np.float64)
-        for ci, ch in enumerate(HIST_CHANNELS):
-            if ch in channels:
-                out[f"hist_{ch}"] = hist[:, ci]
+        for ci, ch in enumerate(channels):
+            out[f"hist_{ch}"] = hist[:, ci]
         out["hist_edges"] = np.asarray(state["hist_edges"], np.float64)
     return out
 
 
 def _hist_channels(pts) -> tuple:
-    spec = pts[0].histogram
-    return spec.channels if spec is not None else ()
+    return _selected_channels(pts[0].histogram)
 
 
 def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
@@ -650,11 +813,13 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
     max_steps = max_steps or default_max_steps(params)
     chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, max_steps)
     init_state = _initial_state(params, n_replicas, max_runs)
+    channels = _hist_channels([params])
     out = _run_chunked(_params_vector(params), jax.random.PRNGKey(seed),
                        1, n_replicas, chunk, jnp.int32(max_steps // chunk),
                        max_steps % chunk, impl, early_exit,
-                       _struct_key(params), init_state)
-    return _extract(out, channels=_hist_channels([params]))
+                       _struct_key(params), hazards.hazard_kind(params),
+                       channels, init_state)
+    return _extract(out, channels=channels)
 
 
 def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
@@ -699,6 +864,11 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
     engine's same-seed-per-replication policy), giving common random
     numbers across the grid.
 
+    The hazard family (exponential / weibull / bathtub — see
+    :mod:`repro.core.hazards`) is a static compile switch, so a grid
+    mixing families runs one batch per family; hazard *parameters*
+    (rates, ``k``, taus) are traced and share programs freely.
+
     Returns a list of ``{metric: np.ndarray (R,)}`` dicts in input order.
     """
     params_list = list(params_list)
@@ -718,20 +888,23 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
             "Params.histogram spec (the in-scan accumulator layout is "
             "per-batch); split the grid or unify the spec")
 
-    groups: Dict[Optional[tuple], list] = {}
-    if padded:
-        # structure padding makes every point shape-compatible: one flat
-        # batch, one compilation (struct_key None -> one jit cache entry)
-        groups[None] = list(range(len(params_list)))
-    else:
-        for i, p in enumerate(params_list):
-            groups.setdefault(_struct_key(p), []).append(i)
+    groups: Dict[tuple, list] = {}
+    for i, p in enumerate(params_list):
+        # the hazard family is a static compile switch (it changes the
+        # step program and the uniform-stream width), so a grid mixing
+        # families splits into one batch per family; within a family,
+        # structure padding keeps the whole sub-grid one compilation
+        # (struct_key None -> one jit cache entry).  Hazard *parameters*
+        # (k, taus, rates) stay traced, so they never split a group.
+        kind = hazards.hazard_kind(p)
+        gkey = (kind, None) if padded else (kind, _struct_key(p))
+        groups.setdefault(gkey, []).append(i)
     mr = _max_runs_for(params_list) if max_runs is None else max_runs
 
     bucket = padded and bucketed
     channels = _hist_channels(params_list)
     results: list = [None] * len(params_list)
-    for skey, idxs in groups.items():
+    for (kind, skey), idxs in groups.items():
         pts = [params_list[i] for i in idxs]
         P, R = len(pts), n_replicas
         steps = max_steps or max(default_max_steps(p) for p in pts)
@@ -744,16 +917,21 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
             # remainder stays a static part of the signature, so pass a
             # chunk multiple (or omit max_steps) for maximal sharing
             steps = -(-steps // chunk) * chunk
-        pv = jnp.stack([_params_vector(p) for p in pts])        # (P, 15)
-        if P_run != P:   # padding rows are inert (phase DONE); any finite
-            pv = jnp.pad(pv, ((0, P_run - P), (0, 0)))  # param row works
-        pv_flat = jnp.repeat(pv, R_run, axis=0)            # (P_run*R_run, 15)
+        pv = jnp.stack([_params_vector(p) for p in pts])        # (P, n_cols)
+        if P_run != P:
+            # padding rows are inert (phase DONE); replicating the last
+            # real row keeps every hazard column benign (a zero
+            # bathtub tau would evaluate g(t) to NaN — masked out, but
+            # edge-padding avoids NaNs entering the race at all)
+            pv = jnp.pad(pv, ((0, P_run - P), (0, 0)), mode="edge")
+        pv_flat = jnp.repeat(pv, R_run, axis=0)       # (P_run*R_run, n_cols)
         init_state = _initial_state_batch(pts, R, mr)
         if (P_run, R_run) != (P, R):
             init_state = _bucket_pad_state(init_state, P, R, P_run, R_run)
         out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P_run, R_run,
                            chunk, jnp.int32(steps // chunk), steps % chunk,
-                           impl, early_exit, skey, init_state)
+                           impl, early_exit, skey, kind, channels,
+                           init_state)
         for j, i in enumerate(idxs):
             rows = (slice(j * R_run, j * R_run + R) if R_run == R
                     else np.arange(R) + j * R_run)

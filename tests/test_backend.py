@@ -24,7 +24,11 @@ def test_auto_resolves_ctmc_for_default_model():
 @pytest.mark.parametrize("params", [
     BASE.replace(checkpoint_interval=60.0),
     BASE.replace(retirement_threshold=3),
-    BASE.replace(failure_distribution="weibull"),
+    # weibull/bathtub *failure* processes run on the CTMC fast path now
+    # (tests/test_nonexp.py); lognormal failures and non-exponential
+    # repairs still fall back
+    BASE.replace(failure_distribution="lognormal"),
+    BASE.replace(repair_distribution="weibull"),
     BASE.replace(standbys_can_fail=True),
 ])
 def test_auto_falls_back_to_event(params):

@@ -111,6 +111,37 @@ def test_cross_engine_cdf_agreement_within_bin_resolution():
     assert abs(wc.counts[0] / wc.total - we.counts[0] / we.total) < 0.08
 
 
+def test_per_replica_dispersion_stats_both_engines():
+    """Cross-replica spread of distribution tails: each replica's own
+    p99 (binned identically on both engines) aggregates into a
+    ``{channel}_p99_replica`` Stat whose .iqr is the p99 IQR across
+    replicas."""
+    from repro.core.histograms import percentiles_per_row
+
+    rc = run_replications(BASE, 64, engine="ctmc")
+    re_ = run_replications(BASE.replace(job_length=0.5 * DAY), 16,
+                           engine="event")
+    for rep in (rc, re_):
+        for ch in ("run_duration", "recovery", "waiting"):
+            st = rep.stats[f"{ch}_p99_replica"]
+            assert np.isfinite(st.mean)
+            assert np.isfinite(st.iqr) and st.iqr >= 0.0
+            # per-replica p99 estimates can never exceed the pooled
+            # histogram's top edge
+            assert st.maximum <= rep.histograms[ch].edges[-1] + 1e-9
+    # the CTMC stat is the vectorized per-row percentile of the raw
+    # per-replica counts
+    arr = rc.arrays["hist_run_duration"]
+    per = percentiles_per_row(rc.arrays["hist_edges"], arr, 99)
+    st = rc.stats["run_duration_p99_replica"]
+    assert st.mean == pytest.approx(np.nanmean(per))
+    # replicas genuinely disagree about their tail in this config
+    assert st.iqr > 0.0
+    # histogram=None compiles the stat away
+    off = run_replications(BASE.replace(histogram=None), 8, engine="ctmc")
+    assert "run_duration_p99_replica" not in off.stats
+
+
 def test_dist_stats_surface_through_replications_both_engines():
     rc = run_replications(BASE, 64, engine="ctmc")
     re_ = run_replications(BASE.replace(job_length=0.5 * DAY), 8,
@@ -138,6 +169,29 @@ def test_channel_subsetting_filters_outputs():
     rep = run_replications(p, 8, engine="ctmc")
     assert set(rep.histograms) == {"run_duration"}
     assert "recovery_dist" not in rep.stats
+
+
+def test_channel_subsetting_shrinks_scan_state():
+    """Unselected channels are compiled out of the scan carry: the
+    in-scan accumulator allocates one lane per *selected* channel, and
+    the kept channel's counts are unchanged bit for bit."""
+    from repro.core.vectorized import _initial_state
+
+    sub = SHORT.replace(histogram=HistogramSpec(channels=("recovery",)))
+    state = _initial_state(sub, 4)
+    full = _initial_state(SHORT, 4)
+    assert state["hist"].shape == (4, 1, sub.histogram.n_counts)
+    assert full["hist"].shape == (4, 3, SHORT.histogram.n_counts)
+    # identical trajectory, identical kept-channel counts
+    a = simulate_ctmc(sub, n_replicas=16, seed=3)
+    b = simulate_ctmc(SHORT, n_replicas=16, seed=3)
+    np.testing.assert_array_equal(a["hist_recovery"], b["hist_recovery"])
+    np.testing.assert_array_equal(a["total_time"], b["total_time"])
+    # an empty channel tuple behaves like histogram=None inside the scan
+    none_ch = SHORT.replace(histogram=HistogramSpec(channels=()))
+    assert "hist" not in _initial_state(none_ch, 4)
+    out = simulate_ctmc(none_ch, n_replicas=8, seed=1)
+    assert not any(k.startswith("hist") for k in out)
 
 
 def test_histogram_none_compiles_accumulator_out():

@@ -66,7 +66,12 @@ def test_zero_failures_exact():
 
 def test_unsupported_params_rejected():
     assert not supports(Params(retirement_threshold=3))
-    assert not supports(Params(failure_distribution="weibull"))
+    # weibull/bathtub are on the fast path now; lognormal and
+    # non-exponential repairs still are not (tests/test_nonexp.py covers
+    # the supported families)
+    assert not supports(Params(failure_distribution="lognormal"))
+    assert not supports(Params(failure_distribution="weibull",
+                               repair_distribution="weibull"))
     assert not supports(Params(checkpoint_interval=60.0))
     with pytest.raises(ValueError):
         simulate_ctmc(Params(retirement_threshold=3), n_replicas=4)
