@@ -105,20 +105,23 @@ def _agreement_points(ct_points, ev_points, key: str) -> list:
 
 
 def _engine_ab_sweep(base: Params, n_points: int, n_replicas: int,
-                     title: str) -> Dict[str, object]:
-    """Shared A/B protocol: one recovery-time grid through both engines.
+                     title: str, parameter: str = "recovery_time",
+                     values=None) -> Dict[str, object]:
+    """Shared A/B protocol: one parameter grid through both engines.
 
     CTMC runs twice (cold = compile-inclusive, then warm), the event
     engine once; reports wall clock, speedups, and per-point agreement
     of the ``total_time`` means in pooled-standard-error units.  Every
     engine-vs-engine sweep benchmark wraps this so the timing and
-    agreement conventions cannot drift apart.
+    agreement conventions cannot drift apart.  ``parameter`` defaults to
+    the recovery-time grid; the repair benchmark sweeps a repair knob
+    instead.
     """
-    values = [float(v) for v in np.linspace(5.0, 40.0, n_points)]
+    if values is None:
+        values = [float(v) for v in np.linspace(5.0, 40.0, n_points)]
     kw = dict(n_replications=n_replicas, base_params=base, base_seed=0)
 
-    ctmc_sweep = OneWaySweep(title, "recovery_time", values,
-                             engine="ctmc", **kw)
+    ctmc_sweep = OneWaySweep(title, parameter, values, engine="ctmc", **kw)
     t0 = time.perf_counter()
     ct = ctmc_sweep.run()
     compile_s = time.perf_counter() - t0   # includes one-off XLA compile
@@ -126,13 +129,12 @@ def _engine_ab_sweep(base: Params, n_points: int, n_replicas: int,
     ct = ctmc_sweep.run()
     ctmc_s = time.perf_counter() - t0
 
-    event_sweep = OneWaySweep(title, "recovery_time", values,
-                              engine="event", **kw)
+    event_sweep = OneWaySweep(title, parameter, values, engine="event", **kw)
     t0 = time.perf_counter()
     ev = event_sweep.run()
     event_s = time.perf_counter() - t0
 
-    points = _agreement_points(ct.points, ev.points, "recovery_time")
+    points = _agreement_points(ct.points, ev.points, parameter)
     return {
         "n_points": n_points,
         "n_replicas": n_replicas,
@@ -246,6 +248,83 @@ def weibull_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
         "distribution_kwargs": dict(base.distribution_kwargs),
         **_engine_ab_sweep(base, n_points, n_replicas, "nonexp-bench"),
     }
+
+
+def repair_bench_params() -> Params:
+    """The repair-policy benchmark scenario, shared with the CI quick
+    gate (scripts/check_bench.py) so the gate always measures the same
+    scenario it compares against: lognormal failures (sigma 1.0, where
+    the event engine pays O(cluster) Python-level draws per restart) +
+    Weibull k=0.7 repairs through the slot lane, on a 128-server job."""
+    return Params(job_size=128, working_pool_size=144, spare_pool_size=16,
+                  warm_standbys=8, job_length=1 * MINUTES_PER_DAY,
+                  random_failure_rate=0.5 / MINUTES_PER_DAY,
+                  failure_distribution="lognormal",
+                  repair_distribution="weibull",
+                  distribution_kwargs={"k": 0.7, "sigma": 1.0},
+                  manual_repair_time=480.0, seed=0)
+
+
+def repair_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
+                            ) -> Dict[str, object]:
+    """Repair-policy grid on the fast path: the realistic repair study.
+
+    Before the repair-slot lane (and the lognormal mode-bound majorant)
+    existed, ANY non-exponential repair or lognormal failure pushed the
+    whole study onto the one-trajectory event engine — making realistic
+    repair-policy sweeps the slowest scenarios supported: fleet studies
+    measure heavy-tailed failure AND repair times, and the event
+    engine's generic failure sampler is O(cluster) Python-level draws
+    per restart.  Sweeps ``auto_repair_time`` under lognormal failures
+    (sigma 1.0) with Weibull k=0.7 repairs through both engines
+    (8 x 256 by default; the CTMC side's cost is cluster-size
+    *independent* — compartment counts plus an occupancy-sized slot
+    lane — while the event side scales with the 128-server job).
+    Reports wall clock, warm speedup, and per-point agreement.  The
+    acceptance floor for this entry is a >= 5x warm speedup
+    (scripts/check_bench.py gates it).
+    """
+    base = repair_bench_params().replace(
+        max_run_records=72)   # bench-unique jit shapes
+    values = [float(v) for v in np.linspace(30.0, 240.0, n_points)]
+    return {
+        "failure_distribution": base.failure_distribution,
+        "repair_distribution": base.repair_distribution,
+        "distribution_kwargs": dict(base.distribution_kwargs),
+        **_engine_ab_sweep(base, n_points, n_replicas, "repair-bench",
+                           parameter="auto_repair_time", values=values),
+    }
+
+
+def repair_smoke(n_replicas: int = 24) -> Dict[str, object]:
+    """CI guard: a repair-parameter grid under non-exponential repairs
+    must compile exactly one XLA program (repair scales/means stay
+    traced); exits nonzero otherwise."""
+    from repro.core import run_replications_batch, vectorized
+
+    base = Params(job_size=16, working_pool_size=32, spare_pool_size=4,
+                  warm_standbys=2, job_length=0.1 * MINUTES_PER_DAY,
+                  random_failure_rate=2.0 / MINUTES_PER_DAY,
+                  recovery_time=5.0, auto_repair_time=30.0,
+                  manual_repair_time=60.0, seed=0,
+                  repair_distribution="weibull",
+                  distribution_kwargs={"k": 0.7},
+                  max_run_records=9)   # bench-unique jit shapes
+    grid = [base.replace(auto_repair_time=v) for v in (20.0, 30.0, 45.0)]
+    c0 = vectorized.compile_cache_size()
+    run_replications_batch(grid, n_replicas, engine="ctmc", max_steps=192)
+    c1 = vectorized.compile_cache_size()
+    compiles = None if c0 is None else c1 - c0
+    out = {"n_points": len(grid), "n_replicas": n_replicas,
+           "compiles": compiles}
+    if compiles is None:
+        out["note"] = ("jit cache introspection unavailable on this jax; "
+                       "repair-grid guard skipped")
+    elif compiles != 1:
+        raise SystemExit(
+            f"compile-count regression: repair-parameter grid compiled "
+            f"{compiles} XLA programs, expected exactly 1")
+    return out
 
 
 def bucketed_sweep_throughput(n_replicas: int = 256) -> Dict[str, object]:
@@ -398,18 +477,21 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
 
     if "--smoke" in sys.argv:
         print(json.dumps({"structural": structural_smoke(),
-                          "bucketing": bucketing_smoke()}, indent=2))
+                          "bucketing": bucketing_smoke(),
+                          "repair": repair_smoke()}, indent=2))
         sys.exit(0)
     sw = sweep_throughput()
     sw["structural"] = structural_sweep_throughput()
     sw["bucketing"] = bucketed_sweep_throughput()
     sw["nonexp"] = weibull_sweep_throughput()
-    sections = ("points", "structural", "bucketing", "nonexp")
+    sw["repair_dist"] = repair_sweep_throughput()
+    sections = ("points", "structural", "bucketing", "nonexp", "repair_dist")
     print(json.dumps({k: v for k, v in sw.items() if k not in sections},
                      indent=2))
     print(json.dumps({k: v for k, v in sw["structural"].items()
                       if k != "points"}, indent=2))
     print(json.dumps(sw["bucketing"], indent=2))
-    print(json.dumps({k: v for k, v in sw["nonexp"].items()
-                      if k != "points"}, indent=2))
+    for sec in ("nonexp", "repair_dist"):
+        print(json.dumps({k: v for k, v in sw[sec].items()
+                          if k != "points"}, indent=2))
     print("wrote", write_sweep_artifact(sw))

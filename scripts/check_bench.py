@@ -1,0 +1,222 @@
+#!/usr/bin/env python
+"""Bench regression gate: keep BENCH_sweep.json an enforced contract.
+
+Two modes:
+
+* ``--quick`` (default; what plain ``scripts/ci.sh`` and hosted CI run):
+  re-measures a scaled-down warm-speedup A/B for the exponential
+  baseline sweep and the repair-distribution sweep, then checks them
+  against the *committed* BENCH_sweep.json with a generous tolerance
+  band (small grids amortize fixed overhead worse and CI runners are
+  noisy, so the quick gate catches collapses — a fast path silently
+  falling back to the event engine — not percent-level drift).
+
+* ``--fresh PATH`` (what ``scripts/ci.sh --bench`` runs after
+  regenerating the artifact): compares a freshly measured full artifact
+  against a baseline copy saved before the run, enforcing relative
+  bands, the absolute speedup floors (the repair_dist entry's >= 5x
+  acceptance criterion among them), exact compile-count invariants, and
+  cross-engine agreement sanity.  ``--append-history`` then appends a
+  timestamped one-line JSON record to BENCH_history.jsonl so the perf
+  trajectory is machine-readable across PRs.
+
+Exit status is nonzero on any violated gate; every gate prints a
+PASS/FAIL line so the CI log reads as a checklist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from datetime import datetime, timezone
+
+#: absolute warm-speedup floors for the full artifact — the claims the
+#: README/BENCH entries make, enforced rather than aspirational
+FULL_SPEEDUP_FLOORS = {
+    "speedup_x": 3.0,            # exponential baseline sweep
+    "nonexp.speedup_x": 5.0,     # weibull failure grid
+    "repair_dist.speedup_x": 5.0,   # repair-policy grid (acceptance)
+}
+
+#: exact compile-count invariants of the full artifact
+FULL_COMPILE_GATES = {
+    "structural.padded_compiles": 1,
+    "bucketing.bucketed_compiles": 1,
+}
+
+_FAILURES = []
+
+
+def _gate(name: str, ok: bool, detail: str) -> None:
+    print(f"[{'PASS' if ok else 'FAIL'}] {name}: {detail}")
+    if not ok:
+        _FAILURES.append(name)
+
+
+def _lookup(doc: dict, dotted: str):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            stderr=subprocess.DEVNULL).decode().strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+# ---------------------------------------------------------------------------
+# quick mode
+# ---------------------------------------------------------------------------
+
+def _quick_ab(base, parameter, values, n_replicas):
+    """Warm CTMC wall vs event wall on a small grid (compile excluded)."""
+    from repro.core import OneWaySweep
+
+    kw = dict(n_replications=n_replicas, base_params=base, base_seed=0)
+    ct = OneWaySweep("quick", parameter, values, engine="ctmc", **kw)
+    ct.run()                                     # compile
+    t0 = time.perf_counter()
+    ct.run()
+    ctmc_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    OneWaySweep("quick", parameter, values, engine="event", **kw).run()
+    event_s = time.perf_counter() - t0
+    return event_s / max(ctmc_s, 1e-9)
+
+
+def run_quick(baseline: dict, tolerance: float) -> None:
+    import os
+    # `python scripts/check_bench.py` puts scripts/ (not the repo root)
+    # first on sys.path; the benchmarks package lives at the root
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.engine_perf import repair_bench_params, sweep_bench_params
+    from repro.core import MINUTES_PER_DAY
+
+    # exponential baseline sweep, quick scale (distinct max_run_records
+    # keeps the jit cache entries from colliding with test runs)
+    base = sweep_bench_params().replace(job_length=0.5 * MINUTES_PER_DAY,
+                                        max_run_records=61)
+    q_exp = _quick_ab(base, "recovery_time", [5.0, 15.0, 25.0, 35.0], 64)
+    b_exp = baseline.get("speedup_x")
+    # a missing baseline key must fail loudly: `>= tolerance * 0` would
+    # otherwise pass unconditionally — exactly the silent-collapse
+    # regression this gate exists to catch
+    _gate("quick.exponential_speedup",
+          b_exp is not None and q_exp >= tolerance * b_exp,
+          f"measured {q_exp:.2f}x warm (4x64 grid) vs committed "
+          f"{'MISSING' if b_exp is None else f'{b_exp:.2f}x'} (8x256); "
+          f"floor {tolerance:.2f}x of committed")
+
+    # the exact scenario the committed repair_dist entry measures
+    # (shared factory — the gate and the baseline cannot drift apart),
+    # shrunk to quick scale
+    rbase = repair_bench_params().replace(
+        job_length=0.5 * MINUTES_PER_DAY, max_run_records=62)
+    q_rep = _quick_ab(rbase, "auto_repair_time", [30.0, 90.0, 150.0, 210.0],
+                      64)
+    b_rep = _lookup(baseline, "repair_dist.speedup_x")
+    _gate("quick.repair_dist_speedup",
+          b_rep is not None and q_rep >= tolerance * b_rep,
+          f"measured {q_rep:.2f}x warm (4x64 grid) vs committed "
+          f"{'MISSING' if b_rep is None else f'{b_rep:.2f}x'} (8x256); "
+          f"floor {tolerance:.2f}x of committed")
+
+
+# ---------------------------------------------------------------------------
+# full mode
+# ---------------------------------------------------------------------------
+
+def run_full(fresh: dict, baseline: dict, rel_tolerance: float) -> None:
+    for key, floor in FULL_SPEEDUP_FLOORS.items():
+        val = _lookup(fresh, key)
+        _gate(f"full.{key}.floor", val is not None and val >= floor,
+              f"{val if val is None else round(val, 2)}x >= {floor}x")
+        base = _lookup(baseline, key)
+        if base:
+            ok = val is not None and val >= (1.0 - rel_tolerance) * base
+            _gate(f"full.{key}.band", ok,
+                  f"{val if val is None else round(val, 2)}x within "
+                  f"{rel_tolerance:.0%} of baseline {round(base, 2)}x")
+    for key, want in FULL_COMPILE_GATES.items():
+        val = _lookup(fresh, key)
+        # None = jit-cache introspection unavailable on this jax: the
+        # count cannot be measured, which is not a regression
+        _gate(f"full.{key}", val is None or val == want,
+              f"{val} == {want} (None = unmeasurable, tolerated)")
+    for sec in ("", "structural.", "nonexp.", "repair_dist."):
+        key = f"{sec}max_abs_z"
+        val = _lookup(fresh, key)
+        _gate(f"full.{key}", val is not None and val < 4.0,
+              f"cross-engine agreement |z| {val and round(val, 2)} < 4.0")
+
+
+def append_history(fresh: dict, path: str) -> None:
+    record = {
+        "ts": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "git": _git_sha(),
+        "speedup_x": fresh.get("speedup_x"),
+        "structural_warm_x": _lookup(
+            fresh, "structural.padded_vs_per_structure_warm_x"),
+        "structural_padded_compiles": _lookup(
+            fresh, "structural.padded_compiles"),
+        "bucketing_resize_x": _lookup(fresh, "bucketing.resize_speedup_x"),
+        "bucketing_compiles": _lookup(fresh, "bucketing.bucketed_compiles"),
+        "nonexp_speedup_x": _lookup(fresh, "nonexp.speedup_x"),
+        "repair_dist_speedup_x": _lookup(fresh, "repair_dist.speedup_x"),
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(record) + "\n")
+    print(f"appended perf record to {path}: {record}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_sweep.json",
+                    help="committed/saved baseline artifact")
+    ap.add_argument("--fresh", default=None,
+                    help="freshly measured artifact to gate (full mode)")
+    ap.add_argument("--quick", action="store_true",
+                    help="scaled-down re-measurement vs the baseline "
+                         "(default when --fresh is absent)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="quick mode: fraction of the committed speedup "
+                         "the small-grid measurement must reach")
+    ap.add_argument("--rel-tolerance", type=float, default=0.5,
+                    help="full mode: allowed relative drop vs baseline")
+    ap.add_argument("--append-history", nargs="?", const="BENCH_history.jsonl",
+                    default=None, help="append a timestamped record "
+                    "(full mode, after the gates pass)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    if args.fresh:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        run_full(fresh, baseline, args.rel_tolerance)
+        if not _FAILURES and args.append_history:
+            append_history(fresh, args.append_history)
+    else:
+        run_quick(baseline, args.tolerance)
+
+    if _FAILURES:
+        print(f"\nbench gate FAILED: {_FAILURES}", file=sys.stderr)
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

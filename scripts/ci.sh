@@ -2,17 +2,52 @@
 # Tier-1 verification in one command (what the roadmap calls "tier-1
 # verify"), plus the machine-readable sweep-performance artifact.
 #
-#   scripts/ci.sh           # tests + compile smokes (structure + bucketing)
-#   scripts/ci.sh --bench   # also: full sweep benchmarks -> BENCH_sweep.json
-#                           #       (incl. the "bucketing" section)
+#   scripts/ci.sh           # tests + compile smokes + quick bench gate
+#   scripts/ci.sh --bench   # also: full sweep benchmarks -> BENCH_sweep.json,
+#                           #       gated against the committed baseline and
+#                           #       appended to BENCH_history.jsonl
+#
+# Environment knobs (the hosted workflow sets these):
+#   CI_ARTIFACTS_DIR  if set, write pytest junit XML + the smoke/bench
+#                     output there for upload as CI artifacts
 set -euo pipefail
-cd "$(dirname "$0")/.."
+cd "$(dirname "$0")/.." || exit 1
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# fail fast with a readable message when the pinned toolchain is broken
+# (otherwise a bad jax install surfaces as a wall of pytest collection
+# errors with the real cause buried)
+if ! python - <<'EOF'
+import sys
+try:
+    import jax, jaxlib, numpy, scipy  # noqa: F401
+except Exception as exc:  # pragma: no cover - the readable-failure path
+    print(f"TOOLCHAIN BROKEN: cannot import the pinned stack: {exc!r}",
+          file=sys.stderr)
+    sys.exit(1)
+print(f"toolchain: python {sys.version.split()[0]}, jax {jax.__version__}, "
+      f"jaxlib {jaxlib.__version__}, numpy {numpy.__version__}, "
+      f"scipy {scipy.__version__}")
+EOF
+then
+    echo "scripts/ci.sh: aborting before pytest — fix the environment" \
+         "(see the import error above; the pins live in" \
+         ".github/workflows/ci.yml)" >&2
+    exit 1
+fi
+
+JUNIT_ARGS=()
+if [[ -n "${CI_ARTIFACTS_DIR:-}" ]]; then
+    mkdir -p "${CI_ARTIFACTS_DIR}"
+    JUNIT_ARGS=(--junitxml="${CI_ARTIFACTS_DIR}/junit.xml")
+fi
+
 # -p no:randomly pins collection order if pytest-randomly is ever
-# installed, so the tier-1 pass is reproducible run to run
-python -m pytest -x -q -p no:randomly
+# installed, so the tier-1 pass is reproducible run to run.
+# (the ${arr[@]+...} guard keeps the empty-array expansion legal under
+# `set -u` on bash <= 4.3 — stock macOS bash 3.2 included)
+python -m pytest -x -q -p no:randomly ${JUNIT_ARGS[@]+"${JUNIT_ARGS[@]}"}
 
 # public-API doctests: the runnable examples in the core docstrings
 # (Params, HistogramSpec, run_replications_batch, the sweep classes,
@@ -31,14 +66,36 @@ python scripts/check_links.py
 # non-exponential suites must pass rerun standalone with a cold pytest
 # cache — exactly what a `pytest --lf` retry after a failure would run
 python -m pytest -q -p no:randomly -p no:cacheprovider \
-    tests/test_histograms.py tests/test_bucketing.py tests/test_nonexp.py
+    tests/test_histograms.py tests/test_bucketing.py tests/test_nonexp.py \
+    tests/test_repair_dist.py
 
 # compile-count smokes: a tiny mixed-structure grid must compile exactly
-# one XLA program per padded group, and two same-bucket sweeps of
-# different (P, R, step-budget) must share exactly one program; exits
-# nonzero on either regression.
-python benchmarks/engine_perf.py --smoke
+# one XLA program per padded group, two same-bucket sweeps of different
+# (P, R, step-budget) must share exactly one program, and a
+# repair-parameter grid under non-exponential repairs must compile
+# once; exits nonzero on any regression.
+if [[ -n "${CI_ARTIFACTS_DIR:-}" ]]; then
+    python benchmarks/engine_perf.py --smoke \
+        | tee "${CI_ARTIFACTS_DIR}/bench_smoke.json"
+else
+    python benchmarks/engine_perf.py --smoke
+fi
+
+# bench regression gate, quick mode: scaled-down warm-speedup
+# measurements against the committed BENCH_sweep.json baselines (loose
+# tolerance — catches a fast path silently collapsing, not noise)
+python scripts/check_bench.py --quick
 
 if [[ "${1:-}" == "--bench" ]]; then
+    # full benchmarks regenerate BENCH_sweep.json; gate the fresh
+    # numbers against the pre-run baseline and append the perf record
+    BASELINE="$(mktemp)"
+    cp BENCH_sweep.json "${BASELINE}"
     python benchmarks/engine_perf.py
+    python scripts/check_bench.py --baseline "${BASELINE}" \
+        --fresh BENCH_sweep.json --append-history BENCH_history.jsonl
+    rm -f "${BASELINE}"
+    if [[ -n "${CI_ARTIFACTS_DIR:-}" ]]; then
+        cp BENCH_sweep.json "${CI_ARTIFACTS_DIR}/BENCH_sweep.json"
+    fi
 fi

@@ -6,8 +6,9 @@ AIReSim has two engines with one statistical contract:
     Exact for every feature (retirement, bad-set regeneration, arbitrary
     distributions, checkpoint rollback), one trajectory at a time.
   * ``ctmc``  — the vectorized JAX engine (:mod:`repro.core.vectorized`).
-    Covers the paper's exponential model *and* the age-dependent Weibull
-    / bathtub failure families (see ``vectorized.supports`` and
+    Covers the paper's exponential model, the age-dependent Weibull /
+    bathtub / lognormal failure families, *and* Weibull / lognormal /
+    deterministic repair distributions (see ``vectorized.supports`` and
     docs/distributions.md), simulating thousands of replicas — and, via
     :func:`run_replications_batch`, whole sweep grids, including
     *structural* grids over job_size / pool sizes / warm_standbys — as a
@@ -52,7 +53,8 @@ def resolve_engine(params: Params, engine: str = "auto") -> str:
         raise ValueError(
             "engine='ctmc' requested but these Params are outside the CTMC "
             "envelope (failure distribution not exponential/weibull/"
-            "bathtub, non-exponential repairs, retirement, bad-set "
+            "bathtub/lognormal, repair distribution not exponential/"
+            "weibull/lognormal/deterministic, retirement, bad-set "
             "regeneration, checkpoint_interval > 0, or failing standbys); "
             "use engine='auto' to fall back to the event engine")
     return engine
@@ -83,6 +85,13 @@ def _from_arrays(arrays: Dict[str, np.ndarray], n: int) -> Replications:
             f"{incomplete}/{n} CTMC replicas hit the step budget before "
             "finishing the job; means are biased low — raise max_steps "
             "(stats carry a 'completed' entry with the finished fraction)",
+            RuntimeWarning, stacklevel=3)
+    overflows = int(arrays.get("n_repair_overflow", np.zeros(1)).sum())
+    if overflows:
+        warnings.warn(
+            f"{overflows} diagnosed failure(s) found the repair-slot lane "
+            "full (the server never leaves the shop; results are biased) "
+            "— raise Params.repair_slots",
             RuntimeWarning, stacklevel=3)
     hists = histograms_from_arrays(arrays)
     return Replications(engine="ctmc", n=n,

@@ -70,11 +70,27 @@ class LogNormal(Distribution):
     mean_value: float
     sigma: float = 1.0
 
+    @property
+    def mu(self) -> float:
+        """Log-space location for the configured mean (-inf if disabled)."""
+        if self.mean_value <= 0 or math.isinf(self.mean_value):
+            return -math.inf
+        return math.log(self.mean_value) - 0.5 * self.sigma ** 2
+
+    @property
+    def scale(self) -> float:
+        """``exp(mu)`` — the median; 0 for a disabled (infinite-mean) clock.
+
+        This is the scale-family parameter the vectorized engine traces:
+        the hazard satisfies ``h_scale(t) = h_1(t / scale) / scale``.
+        """
+        mu = self.mu
+        return 0.0 if math.isinf(mu) else math.exp(mu)
+
     def sample(self, rng: np.random.Generator) -> float:
         if self.mean_value <= 0 or math.isinf(self.mean_value):
             return math.inf
-        mu = math.log(self.mean_value) - 0.5 * self.sigma ** 2
-        return float(rng.lognormal(mu, self.sigma))
+        return float(rng.lognormal(self.mu, self.sigma))
 
     @property
     def mean(self) -> float:
@@ -92,11 +108,22 @@ class Weibull(Distribution):
     mean_value: float
     k: float = 1.5
 
+    @property
+    def lam(self) -> float:
+        """Weibull scale for the configured mean; 0 for a disabled clock.
+
+        Single source of the mean -> scale conversion for both engines:
+        the event sampler below and the vectorized engine's traced
+        parameter columns read the same value.
+        """
+        if self.mean_value <= 0 or math.isinf(self.mean_value):
+            return 0.0
+        return self.mean_value / math.gamma(1.0 + 1.0 / self.k)
+
     def sample(self, rng: np.random.Generator) -> float:
         if self.mean_value <= 0 or math.isinf(self.mean_value):
             return math.inf
-        lam = self.mean_value / math.gamma(1.0 + 1.0 / self.k)
-        return float(lam * rng.weibull(self.k))
+        return float(self.lam * rng.weibull(self.k))
 
     @property
     def mean(self) -> float:

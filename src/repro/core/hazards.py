@@ -1,4 +1,4 @@
-"""Hazard models for the vectorized CTMC engine's non-exponential fast path.
+"""Hazard samplers for the vectorized CTMC engine's non-exponential paths.
 
 The event engine samples non-exponential failures by drawing one fresh
 time-to-failure per running server at every compute-phase start
@@ -12,7 +12,34 @@ That is the state the vectorized scan carries: one ``age`` scalar per
 replica, advancing through COMPUTE intervals and resetting to zero
 whenever the job (re)starts.
 
-Two sampling mechanisms cover the supported families:
+Repairs are different in two ways: their clocks do **not** reset with
+the job (a repair in flight keeps its progress across restarts), and
+servers enter the shop at different times, so there is no shared age.
+The scan therefore carries a second lane of per-replica repair *slots*
+(:mod:`repro.core.vectorized`), each holding one in-repair server's
+class, stage, and remaining duration — sampled **at entry** by exact
+inverse-CDF ("conditional inversion from age zero") through the same
+family machinery the failure race uses.
+
+All of that machinery lives behind one interface:
+
+:class:`HazardSampler` — per-family sampling primitives consumed by both
+the failure race and the repair race:
+
+* ``conditional_residual`` — exact closed-form time-to-event from a
+  given age, conditional on survival (inversion families: Weibull).
+* ``majorant`` / ``hazard`` — a provably valid hazard bound over an age
+  window plus the exact hazard for the Ogata-thinning accept step
+  (thinning families: bathtub via convex-endpoint bound, lognormal via
+  a numerically located hazard-mode bound).
+* ``quantile`` — exact inverse-CDF duration sampling for the repair
+  slots (Weibull / lognormal / deterministic).
+
+``FAILURE_SAMPLERS`` / ``REPAIR_SAMPLERS`` register which families each
+race accepts; :func:`hazard_kind` / :func:`repair_kind` are the single
+sources of truth :func:`repro.core.vectorized.supports` dispatches on.
+
+Sampling mechanisms per failure family:
 
 * **Weibull** — closed-form conditional inversion.  All clocks share the
   shape ``k``, so the combined cumulative hazard is ``H(t) = C * t**k``
@@ -42,36 +69,66 @@ Two sampling mechanisms cover the supported families:
   too.  Validity needs exactly ``g_bar >= g`` on ``[a, a + W]``, which
   the convexity argument gives for every parameterization.
 
+* **Lognormal** — mode-bound majorization with Ogata thinning.  The
+  lognormal hazard is neither monotone nor convex: it rises from zero
+  to a single interior maximum and then decays, so the bathtub endpoint
+  bound is invalid.  It *is* unimodal (Sweet 1990), so the supremum
+  over ``[a, a + W]`` is the hazard at the mode clipped into the
+  window: ``h_bar = h(clip(t_mode, a, a + W))``.  The mode location has
+  no closed form; it is located **numerically** host-side, once per
+  sigma (the lognormal is a scale family — ``t_mode = scale *
+  mode_rel(sigma)``), and rides along as a traced parameter column.
+  Random and systematic clocks have different scales, so each family
+  carries its own majorant and acceptance ratio — thinning two
+  independent inhomogeneous Poisson processes separately is exact.
+
 Host-side helpers here build the per-point hazard parameter columns that
-ride along the traced ``(P, 15 + N_HAZARD_COLS)`` parameter matrix, and
-the JAX helpers evaluate ``g`` / the Weibull inversion inside the
-compiled step.  ``hazard_kind`` is the single source of truth for which
-families :func:`repro.core.vectorized.supports` accepts.
+ride along the traced ``(P, 15 + N_HAZARD_COLS + N_REPAIR_COLS)``
+parameter matrix, and the JAX helpers evaluate the hazards / inversions
+/ quantiles inside the compiled step.
 """
 
 from __future__ import annotations
 
 import math
+from functools import lru_cache
 from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
+from jax.scipy.special import log_ndtr, ndtri
 
 from .bathtub import Bathtub
-from .distributions import Weibull, failure_distribution
+from .distributions import (Deterministic, LogNormal, Weibull,
+                            failure_distribution)
 from .params import Params
 
 #: failure-distribution families the vectorized engine can run.  The
 #: kind is a *static* compile-time switch: each family compiles its own
 #: step program (exponential keeps the exact pre-existing one).
-HAZARD_KINDS = ("exponential", "weibull", "bathtub")
+HAZARD_KINDS = ("exponential", "weibull", "bathtub", "lognormal")
+
+#: repair-distribution families the vectorized engine can run.
+#: Exponential keeps the original count-based repair compartments (the
+#: memoryless case needs no per-server state); the others run the
+#: repair-slot lane with durations sampled at entry by inverse CDF.
+REPAIR_KINDS = ("exponential", "weibull", "lognormal", "deterministic")
 
 #: hazard parameter columns appended to the 15 base parameter columns.
 #: Interpretation depends on the (static) hazard kind:
-#:   weibull : [C_rand, C_sys, k, 0, 0]        C = lam**-k per clock
-#:   bathtub : [infant_factor, infant_tau, wear_start, wear_tau, window]
+#:   weibull   : [C_rand, C_sys, k, 0, 0]        C = lam**-k per clock
+#:   bathtub   : [infant_factor, infant_tau, wear_start, wear_tau, window]
+#:   lognormal : [scale_rand, scale_sys, sigma, mode_rel, window]
 #:   exponential : all zeros (unused)
 N_HAZARD_COLS = 5
+
+#: repair parameter columns appended after the hazard columns.
+#: Interpretation depends on the (static) repair kind:
+#:   weibull       : [lam_auto, lam_man, k]
+#:   lognormal     : [scale_auto, scale_man, sigma]
+#:   deterministic : [value_auto, value_man, 0]
+#:   exponential   : all zeros (unused — legacy rate-race path)
+N_REPAIR_COLS = 3
 
 #: fraction of the fastest bathtub time constant used as the thinning
 #: window W: small enough that the endpoint majorant stays tight
@@ -79,15 +136,22 @@ N_HAZARD_COLS = 5
 #: events are rare next to real cluster events.
 BATHTUB_WINDOW_FRACTION = 0.25
 
+#: lognormal thinning window, as a fraction of the earliest enabled
+#: clock's hazard-mode time — the scale on which the hazard actually
+#: varies.  Same tightness/phantom-rate trade as the bathtub window.
+LOGNORMAL_WINDOW_FRACTION = 0.25
+
+_LOG_SQRT_2PI = 0.5 * math.log(2.0 * math.pi)
+
 
 def _build_distribution(params: Params, rate: float):
     """The event engine's own distribution object for this failure clock.
 
     Going through the registry factory keeps every kwarg default in ONE
-    place (the :class:`Weibull` / :class:`Bathtub` dataclasses): if a
-    default is ever retuned there, both engines move together instead of
-    the fast path keeping a stale copy.  Returns None when construction
-    fails — dispatch treats that as unsupported.
+    place (the :class:`Weibull` / :class:`Bathtub` / :class:`LogNormal`
+    dataclasses): if a default is ever retuned there, both engines move
+    together instead of the fast path keeping a stale copy.  Returns
+    None when construction fails — dispatch treats that as unsupported.
     """
     try:
         return failure_distribution(params.failure_distribution, rate,
@@ -96,21 +160,44 @@ def _build_distribution(params: Params, rate: float):
         return None
 
 
+def _build_repair_distributions(params: Params):
+    """(auto, manual) repair distributions, or (None, None) on failure."""
+    from .repair import repair_distributions
+    try:
+        return repair_distributions(params)
+    except (ValueError, TypeError):
+        return None, None
+
+
+@lru_cache(maxsize=1)
+def _scipy_available() -> bool:
+    """The lognormal fast path needs scipy host-side (mode location /
+    peak hazard via ``scipy.special.log_ndtr``).  scipy ships with jax's
+    own dependency set, but if it is ever absent the graceful-degrade
+    convention applies: dispatch falls back to the event engine instead
+    of committing to the fast path and crashing mid-run."""
+    try:
+        import scipy.special  # noqa: F401
+        return True
+    except ImportError:  # pragma: no cover - scipy rides with jax
+        return False
+
+
 def hazard_kind(params: Params) -> Optional[str]:
-    """The vectorized engine's hazard family for these Params, or None.
+    """The vectorized engine's failure-hazard family, or None.
 
     None means the failure distribution is outside the fast path
-    (lognormal, deterministic, user-registered — including a
-    re-registered "weibull"/"bathtub" name that no longer builds the
-    expected class) and the event engine must run it.  Degenerate
-    parameters (``k <= 0``, non-positive taus, ``infant_factor < 1``,
-    which would break the ``g >= 1`` acceptance-probability bound) also
-    return None rather than raising.
+    (deterministic, user-registered — including a re-registered name
+    that no longer builds the expected class) and the event engine must
+    run it.  Degenerate parameters (``k <= 0``, non-positive taus,
+    ``infant_factor < 1`` which would break the ``g >= 1``
+    acceptance-probability bound, ``sigma <= 0``) also return None
+    rather than raising.
     """
     name = params.failure_distribution.lower()
     if name == "exponential":
         return "exponential"
-    if name not in ("weibull", "bathtub"):
+    if name not in ("weibull", "bathtub", "lognormal"):
         return None
     dist = _build_distribution(params, params.random_failure_rate)
     if isinstance(dist, Weibull):
@@ -119,20 +206,95 @@ def hazard_kind(params: Params) -> Optional[str]:
         ok = (dist.infant_factor >= 1.0 and dist.infant_tau > 0
               and dist.wear_tau > 0)
         return "bathtub" if ok else None
+    if isinstance(dist, LogNormal):
+        return "lognormal" if dist.sigma > 0 and _scipy_available() else None
+    return None
+
+
+def repair_kind(params: Params) -> Optional[str]:
+    """The vectorized engine's repair family for these Params, or None.
+
+    Mirrors :func:`hazard_kind` for the repair side: None routes the
+    point to the event engine (user-registered families, or degenerate
+    parameters — ``k <= 0``, ``sigma <= 0``).
+    """
+    name = params.repair_distribution.lower()
+    if name == "exponential":
+        return "exponential"
+    if name not in ("weibull", "lognormal", "deterministic"):
+        return None
+    auto, _ = _build_repair_distributions(params)
+    if isinstance(auto, Weibull):
+        return "weibull" if auto.k > 0 else None
+    if isinstance(auto, LogNormal):
+        return "lognormal" if auto.sigma > 0 else None
+    if isinstance(auto, Deterministic):
+        return "deterministic"
     return None
 
 
 def _weibull_clock_coeff(w: Weibull) -> float:
     """``lam**-k`` for a mean-parameterized Weibull clock; 0 for a
     disabled clock (infinite mean, i.e. zero rate)."""
-    if not math.isfinite(w.mean_value) or w.mean_value <= 0.0:
+    lam = w.lam
+    return 0.0 if lam <= 0.0 else lam ** -w.k
+
+
+def _lognormal_log_hazard_host(logt: float, sigma: float) -> float:
+    """Host-side unit-scale log hazard ``log h(e^logt)`` (scipy).
+
+    The single host-side copy of the lognormal hazard formula; it must
+    mirror :func:`lognormal_hazard` (the JAX twin evaluated inside the
+    compiled step) term for term — mode location and step budgeting
+    read THIS one, the thinning acceptance reads the JAX one, and a fix
+    applied to only one of them silently desynchronizes the majorant
+    from the acceptance ratio.
+    """
+    from scipy.special import log_ndtr as np_log_ndtr
+
+    z = logt / sigma
+    return -0.5 * z * z - _LOG_SQRT_2PI - np_log_ndtr(-z) \
+        - math.log(sigma) - logt
+
+
+@lru_cache(maxsize=64)
+def _lognormal_mode_rel(sigma: float) -> float:
+    """Hazard-mode time of a unit-scale lognormal, located numerically.
+
+    The lognormal hazard ``h(t) = phi(z) / (sigma * t * Phi(-z))`` with
+    ``z = ln(t) / sigma`` (scale 1) is unimodal (Sweet 1990): it rises
+    from 0 to one interior maximum and decays.  There is no closed form
+    for the argmax, so it is found by ternary search on ``log t`` —
+    valid precisely because of unimodality.  The result scales to any
+    clock as ``t_mode = scale * mode_rel(sigma)``; cached per sigma
+    since a whole sweep typically shares one sigma.
+    """
+    lo, hi = -40.0 * sigma - 5.0, 40.0 * sigma + 5.0
+    for _ in range(200):
+        m1 = lo + (hi - lo) / 3.0
+        m2 = hi - (hi - lo) / 3.0
+        if _lognormal_log_hazard_host(m1, sigma) \
+                < _lognormal_log_hazard_host(m2, sigma):
+            lo = m1
+        else:
+            hi = m2
+    return math.exp(0.5 * (lo + hi))
+
+
+def _lognormal_peak_hazard(scale: float, sigma: float) -> float:
+    """``max_t h(t)`` for a lognormal clock, host-side.
+
+    Unit-scale peak rescaled by the clock's scale: the lognormal is a
+    scale family, ``h_scale(t) = h_1(t / scale) / scale``.
+    """
+    if scale <= 0.0:
         return 0.0
-    lam = w.mean_value / math.gamma(1.0 + 1.0 / w.k)
-    return lam ** -w.k
+    logt_mode = math.log(_lognormal_mode_rel(sigma))
+    return math.exp(_lognormal_log_hazard_host(logt_mode, sigma)) / scale
 
 
 def hazard_columns(params: Params) -> np.ndarray:
-    """Per-point hazard parameter columns (traced inputs), host-side.
+    """Per-point failure-hazard parameter columns (traced inputs).
 
     Shape ``(N_HAZARD_COLS,)`` float32; see the column legend on
     :data:`N_HAZARD_COLS`.  Values are read off the same distribution
@@ -154,6 +316,39 @@ def hazard_columns(params: Params) -> np.ndarray:
         cols[2] = bt.wear_start
         cols[3] = bt.wear_tau
         cols[4] = BATHTUB_WINDOW_FRACTION * min(bt.infant_tau, bt.wear_tau)
+    elif kind == "lognormal":
+        ln_rand = _build_distribution(params, params.random_failure_rate)
+        ln_sys = _build_distribution(params, params.systematic_failure_rate)
+        cols[0] = ln_rand.scale
+        cols[1] = ln_sys.scale
+        cols[2] = ln_rand.sigma
+        cols[3] = _lognormal_mode_rel(ln_rand.sigma)
+        scales = [s for s in (ln_rand.scale, ln_sys.scale) if s > 0.0]
+        if scales:
+            cols[4] = LOGNORMAL_WINDOW_FRACTION * cols[3] * min(scales)
+    return cols
+
+
+def repair_columns(params: Params) -> np.ndarray:
+    """Per-point repair parameter columns (traced inputs), host-side.
+
+    Shape ``(N_REPAIR_COLS,)`` float32; see :data:`N_REPAIR_COLS`.
+    Read off the exact distribution objects the event engine's
+    :class:`repro.core.repair.RepairShop` samples from
+    (:func:`repro.core.repair.repair_distributions`) — the engines
+    cannot drift apart on the mean parameterization.
+    """
+    kind = repair_kind(params)
+    cols = np.zeros(N_REPAIR_COLS, np.float32)
+    if kind in (None, "exponential"):
+        return cols
+    auto, man = _build_repair_distributions(params)
+    if kind == "weibull":
+        cols[0], cols[1], cols[2] = auto.lam, man.lam, auto.k
+    elif kind == "lognormal":
+        cols[0], cols[1], cols[2] = auto.scale, man.scale, auto.sigma
+    elif kind == "deterministic":
+        cols[0], cols[1] = auto.value, man.value
     return cols
 
 
@@ -171,14 +366,18 @@ def effective_event_rate(params: Params) -> float:
     * bathtub — the hazard at age zero is ``infant_factor`` times the
       flat rate; the mean-rate estimate scales accordingly (an upper
       bound, which is the safe direction for a step budget).
+    * lognormal — thinning *candidates*, not just accepted failures,
+      consume scan steps, and candidates arrive at up to the majorant
+      rate; the peak hazard ``h(t_mode)`` bounds the majorant, so the
+      budget uses the fleet-summed peak hazard (an upper bound again).
     * exponential — the paper's ``expected_failures_per_minute``.
     """
     kind = hazard_kind(params)
     lam = params.expected_failures_per_minute()
+    n_bad = params.systematic_failure_fraction * params.job_size
     if kind == "weibull":
         cols = hazard_columns(params)
         c_rand, c_sys, k = float(cols[0]), float(cols[1]), float(cols[2])
-        n_bad = params.systematic_failure_fraction * params.job_size
         C = params.job_size * c_rand + n_bad * c_sys
         if C <= 0.0:
             return 0.0
@@ -186,23 +385,64 @@ def effective_event_rate(params: Params) -> float:
         return 1.0 / max(mean_phase, 1e-12)
     if kind == "bathtub":
         return lam * float(hazard_columns(params)[0])   # g(0) ~ infant_factor
+    if kind == "lognormal":
+        cols = hazard_columns(params)
+        sigma = float(cols[2])
+        h_rand = _lognormal_peak_hazard(float(cols[0]), sigma)
+        h_sys = _lognormal_peak_hazard(float(cols[1]), sigma)
+        return params.job_size * h_rand + n_bad * h_sys
     return lam
 
 
 def phantom_steps(params: Params) -> int:
     """Extra scan steps budgeted for thinning phantoms (host-side).
 
-    Bathtub thinning fires a window-expiry phantom at most every ``W``
-    compute minutes plus a rejected candidate per accepted one in the
-    worst case; Weibull inversion is phantom-free.
+    The thinning families (bathtub, lognormal) fire a window-expiry
+    phantom at most every ``W`` compute minutes; rejected candidates
+    are already covered by :func:`effective_event_rate`'s majorant-rate
+    estimate.  Weibull inversion is phantom-free.
     """
-    if hazard_kind(params) != "bathtub":
+    if hazard_kind(params) not in ("bathtub", "lognormal"):
         return 0
     cols = hazard_columns(params)
     window = float(cols[4])
     if window <= 0.0:
         return 0
     return int(params.job_length / window) + 1
+
+
+def expected_repair_occupancy(params: Params) -> float:
+    """Mean number of servers in the repair shop (Little's law).
+
+    Entry rate = diagnosed failures; time in shop = automated stage plus
+    the escalated manual stage.  Used to auto-size the vectorized
+    engine's repair-slot lane (:func:`repro.core.vectorized` sizes the
+    lane several standard deviations above this).
+
+    The entry rate is an *accepted-failure* rate estimate, not the
+    thinning candidate rate: for lognormal hazards
+    :func:`effective_event_rate` deliberately over-budgets with the
+    peak-hazard (majorant) rate because rejected candidates consume
+    scan steps — but they never enter the shop, and sizing the slot
+    lane off that bound doubles the lane's per-step cost for nothing.
+    The nominal mean rate used instead is an estimate, NOT a bound:
+    restart-reset phases whose length lands in the rising part of the
+    hazard can realize an average rate moderately above 1/mean (~20%
+    at sigma=1).  That gap is absorbed by the caller's sizing margin
+    (2x the occupancy plus 8 sigma — see
+    :func:`repro.core.vectorized._repair_slots_for`), and a genuinely
+    undersized lane is surfaced, not silent (``n_repair_overflow`` +
+    RuntimeWarning).  Weibull/bathtub keep the age-zero-ish estimate,
+    which for them upper-bounds the accepted-failure rate.
+    """
+    if hazard_kind(params) == "lognormal":
+        rate = params.expected_failures_per_minute()
+    else:
+        rate = effective_event_rate(params)
+    mean_shop = (params.auto_repair_time
+                 + (1.0 - params.automated_repair_probability)
+                 * params.manual_repair_time)
+    return rate * params.diagnosis_probability * mean_shop
 
 
 # ---------------------------------------------------------------------------
@@ -229,8 +469,173 @@ def weibull_conditional_ttf(age, C, k, exp_draw):
     clock can fire), ``k`` the shared shape, ``exp_draw`` an Exp(1)
     variate.  Returns +inf where ``C <= 0``.  Solves
     ``C * ((age + s)**k - age**k) = E`` for ``s``.
+
+    Arithmetic runs in the dtype of ``age`` — the ``Params.age_dtype``
+    carve-out promotes the age lane to float64 to kill the large-age
+    cancellation of ``(a**k + E/C)**(1/k) - a`` (see docs) — and the
+    result is cast back to float32 for the event race.
     """
+    age = jnp.asarray(age)
+    C = jnp.asarray(C, age.dtype)
+    exp_draw = jnp.asarray(exp_draw, age.dtype)
     safe_c = jnp.maximum(C, 1e-30)
     target = jnp.power(age, k) + exp_draw / safe_c
     s = jnp.power(target, 1.0 / k) - age
-    return jnp.where(C > 0.0, jnp.maximum(s, 0.0), jnp.inf)
+    return jnp.where(C > 0.0, jnp.maximum(s, 0.0), jnp.inf).astype(
+        jnp.float32)
+
+
+def lognormal_hazard(t, scale, sigma):
+    """Lognormal hazard ``h(t) = f(t) / S(t)`` (JAX, numerically stable).
+
+    ``scale = exp(mu)``; a non-positive scale marks a disabled clock and
+    yields 0.  Uses ``log_ndtr`` for the survival term so the deep right
+    tail (large ``z``) stays finite instead of underflowing to 0/0.
+    """
+    safe_scale = jnp.maximum(scale, 1e-30)
+    safe_t = jnp.maximum(t, 1e-30)
+    z = (jnp.log(safe_t) - jnp.log(safe_scale)) / sigma
+    log_h = -0.5 * z * z - _LOG_SQRT_2PI - log_ndtr(-z) \
+        - jnp.log(sigma) - jnp.log(safe_t)
+    return jnp.where(scale > 0.0, jnp.exp(log_h), 0.0)
+
+
+def lognormal_window_majorant(age, window, scale, sigma, mode_rel):
+    """``sup h`` over ``[age, age + window]`` via the clipped mode.
+
+    Unimodality makes the supremum the hazard at the mode when the mode
+    lies inside the window and at the nearer endpoint otherwise — i.e.
+    ``h(clip(scale * mode_rel, age, age + window))``.  ``mode_rel`` is
+    the numerically-located unit-scale mode (:func:`_lognormal_mode_rel`)
+    riding along as a traced parameter column.
+    """
+    t_star = jnp.clip(scale * mode_rel, age, age + window)
+    return lognormal_hazard(t_star, scale, sigma)
+
+
+# ---------------------------------------------------------------------------
+# HazardSampler interface
+# ---------------------------------------------------------------------------
+
+class HazardSampler:
+    """Family-specific sampling primitives for the compiled races.
+
+    One instance per distribution family; stateless.  The failure race
+    consumes ``conditional_residual`` (inversion families) or
+    ``majorant`` + ``hazard`` (thinning families); the repair race
+    consumes ``quantile``.  A family may implement any subset — the
+    registries below declare which race accepts which family, and
+    :func:`repro.core.vectorized.supports` dispatches on those.
+
+    The repair-race method is genuinely polymorphic (one signature, the
+    scan indexes ``REPAIR_SAMPLERS[rkind]`` dynamically).  The
+    failure-race methods take a family-specific ``cols`` tuple —
+    documented on each concrete sampler — because the families need
+    different parameter sets and the scan's per-family branches are
+    static compile switches anyway; a single positional convention
+    would only relabel the parameters, not remove the branches.
+
+    All methods take broadcastable JAX arrays; parameter columns arrive
+    pre-sliced from the traced parameter matrix, so every method is
+    shape-polymorphic over scalar-vs-per-replica parameters.
+    """
+
+    kind: str = "base"
+
+    # -- inversion families (failure race) --------------------------------
+    def conditional_residual(self, age, coeff, shape, exp_draw):
+        """Exact time-to-event from ``age`` given survival (Exp(1) draw)."""
+        raise NotImplementedError(self.kind)
+
+    # -- thinning families (failure race) ---------------------------------
+    def hazard(self, t, cols):
+        """Exact hazard at ``t`` (the Ogata acceptance numerator)."""
+        raise NotImplementedError(self.kind)
+
+    def majorant(self, age, window, cols):
+        """Valid upper bound of the hazard over ``[age, age+window]``."""
+        raise NotImplementedError(self.kind)
+
+    # -- repair race -------------------------------------------------------
+    def quantile(self, u, scale, shape):
+        """Exact inverse CDF — duration sampling at repair entry.
+
+        ``scale`` is the per-stage scale column (0 marks a disabled
+        stage => +inf, the event engine's infinite-mean convention);
+        ``shape`` the family's shared shape column.
+        """
+        raise NotImplementedError(self.kind)
+
+
+class WeibullSampler(HazardSampler):
+    kind = "weibull"
+
+    def conditional_residual(self, age, coeff, shape, exp_draw):
+        return weibull_conditional_ttf(age, coeff, shape, exp_draw)
+
+    def quantile(self, u, scale, shape):
+        q = scale * jnp.power(-jnp.log1p(-u), 1.0 / shape)
+        return jnp.where(scale > 0.0, q, jnp.inf)
+
+
+class BathtubSampler(HazardSampler):
+    kind = "bathtub"
+    #: the bathtub hazard factors as rate * g(t): hazard/majorant return
+    #: the dimensionless g and the race scales the exponential
+    #: propensities by it.
+    #: cols = (infant_factor, infant_tau, wear_start, wear_tau)
+
+    def hazard(self, t, cols):
+        infant_factor, infant_tau, wear_start, wear_tau = cols
+        return bathtub_shape(t, infant_factor, infant_tau, wear_start,
+                             wear_tau)
+
+    def majorant(self, age, window, cols):
+        # convex g => endpoint bound
+        return jnp.maximum(self.hazard(age, cols),
+                           self.hazard(age + window, cols))
+
+
+class LognormalSampler(HazardSampler):
+    kind = "lognormal"
+    #: hazard cols = (scale, sigma); majorant cols = (scale, sigma,
+    #: mode_rel) — the numerically pre-located unit-scale hazard mode
+
+    def hazard(self, t, cols):
+        scale, sigma = cols
+        return lognormal_hazard(t, scale, sigma)
+
+    def majorant(self, age, window, cols):
+        scale, sigma, mode_rel = cols
+        return lognormal_window_majorant(age, window, scale, sigma,
+                                         mode_rel)
+
+    def quantile(self, u, scale, shape):
+        q = scale * jnp.exp(shape * ndtri(u))
+        return jnp.where(scale > 0.0, q, jnp.inf)
+
+
+class DeterministicSampler(HazardSampler):
+    kind = "deterministic"
+
+    def quantile(self, u, scale, shape):
+        # a fixed duration: the inverse CDF is the constant itself
+        # (value 0 is a *valid* instant repair here, mirroring the
+        # event engine's Deterministic(0) => timeout(0))
+        return scale * jnp.ones_like(u)
+
+
+#: failure families with fast-path sampling machinery (exponential is
+#: the legacy rate-race program and needs none of it)
+FAILURE_SAMPLERS = {
+    "weibull": WeibullSampler(),
+    "bathtub": BathtubSampler(),
+    "lognormal": LognormalSampler(),
+}
+
+#: repair families the slot lane can sample at entry
+REPAIR_SAMPLERS = {
+    "weibull": WeibullSampler(),
+    "lognormal": LognormalSampler(),
+    "deterministic": DeterministicSampler(),
+}

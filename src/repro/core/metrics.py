@@ -38,6 +38,10 @@ class RunResult:
     n_host_selections: int = 0         # full host-selection rounds (excl. t=0)
     n_standby_swaps: int = 0
     n_retired: int = 0
+    #: CTMC engine only: diagnosed failures that found the repair-slot
+    #: lane full (see ``Params.repair_slots``).  The event engine has no
+    #: slot bound, so this is exactly zero on the event path.
+    n_repair_overflow: int = 0
     stall_time: float = 0.0            # job waiting with zero capacity
     recovery_overhead: float = 0.0     # sum of recovery_time charges
     lost_work: float = 0.0             # checkpoint-rollback loss (extension)
@@ -84,8 +88,8 @@ _SCALAR_METRICS = (
     "total_time", "n_failures", "n_random_failures", "n_systematic_failures",
     "n_preemptions", "n_auto_repairs", "n_manual_repairs", "n_failed_repairs",
     "n_host_selections", "n_standby_swaps", "n_retired", "n_undiagnosed",
-    "n_misdiagnosed", "stall_time", "recovery_overhead", "lost_work",
-    "mean_run_duration", "overhead_fraction",
+    "n_misdiagnosed", "n_repair_overflow", "stall_time", "recovery_overhead",
+    "lost_work", "mean_run_duration", "overhead_fraction",
 )
 
 _PERCENTILES = (25, 50, 75, 90, 99)

@@ -126,6 +126,23 @@ class Params:
     #: :class:`repro.core.histograms.HistogramSpec`); ``None`` compiles
     #: the accumulator out of the CTMC scan entirely.
     histogram: Optional[HistogramSpec] = field(default_factory=HistogramSpec)
+    #: dtype of the CTMC engine's hazard-age arithmetic ("float32" |
+    #: "float64").  The Weibull conditional inversion
+    #: ``(a^k + E/C)^(1/k) - a`` and the repair-slot countdown cancel
+    #: catastrophically at large ages in float32 (~1e-3 min absolute at
+    #: age ~1e4); "float64" runs just those lanes in double precision
+    #: (requires the ``jax_enable_x64`` flag) and rounds the sampled
+    #: residuals back to float32 for the event race.
+    age_dtype: str = "float32"
+    #: repair-slot lane width of the CTMC engine under *non-exponential*
+    #: repair distributions (each in-repair server occupies one slot
+    #: carrying its class, stage, and remaining duration).  0 (default)
+    #: auto-sizes from the expected shop occupancy (Little's law) with
+    #: generous head-room, rounded to a power of two for program
+    #: sharing.  A full lane surfaces as the ``n_repair_overflow``
+    #: metric (the overflowing server stays in the shop forever) — raise
+    #: this if that ever fires.  Exponential repairs ignore it.
+    repair_slots: int = 0
 
     # -------------------------------------------------------------------------
     def validate(self) -> None:
@@ -153,6 +170,12 @@ class Params:
                 raise ValueError(f"{name} must be non-negative")
         if self.max_run_records < 1:
             raise ValueError("max_run_records must be >= 1")
+        if self.age_dtype not in ("float32", "float64"):
+            raise ValueError(
+                f"age_dtype={self.age_dtype!r} must be 'float32' or "
+                "'float64'")
+        if self.repair_slots < 0:
+            raise ValueError("repair_slots must be non-negative")
         if self.histogram is not None:
             self.histogram.validate()
 

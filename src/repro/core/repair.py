@@ -19,7 +19,7 @@ Paper §III-C module (4) with assumptions 3-5:
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
@@ -28,6 +28,23 @@ from .engine import Environment
 from .metrics import RunResult
 from .params import Params
 from .server import Server, ServerState
+
+
+def repair_distributions(params: Params) -> Tuple[Distribution, Distribution]:
+    """(automated, manual) repair-duration distributions for these Params.
+
+    The single construction point for BOTH engines: the event engine's
+    :class:`RepairShop` samples from these objects, and the vectorized
+    engine's :func:`repro.core.hazards.repair_columns` reads its traced
+    scale/shape parameters off the same instances — so a kwarg default
+    retuned in :mod:`repro.core.distributions` moves the two engines
+    together instead of the fast path keeping a stale copy.
+    """
+    kw = params.distribution_kwargs
+    return (make_distribution(params.repair_distribution,
+                              params.auto_repair_time, **kw),
+            make_distribution(params.repair_distribution,
+                              params.manual_repair_time, **kw))
 
 
 class RepairShop:
@@ -42,11 +59,7 @@ class RepairShop:
         self.on_return = on_return
         self.on_retire = on_retire
         self.in_repair: set = set()
-        kw = params.distribution_kwargs
-        self._auto_dist: Distribution = make_distribution(
-            params.repair_distribution, params.auto_repair_time, **kw)
-        self._manual_dist: Distribution = make_distribution(
-            params.repair_distribution, params.manual_repair_time, **kw)
+        self._auto_dist, self._manual_dist = repair_distributions(params)
 
     # -- public API ----------------------------------------------------------
     def submit(self, server: Server) -> None:

@@ -18,8 +18,13 @@ XLA program and runs the rest through the event-driven engine.  Thanks
 to structure padding this includes *structural* sweeps (job_size, pool
 sizes, warm_standbys, ...): a mixed-structure grid still compiles once
 (``padded=False`` opts back into per-structure compilation for A/B
-measurements).  See the backend module docstring for the exactness
-caveats of each engine.
+measurements).  Failure-hazard and repair-distribution *families* are
+static compile switches (one batch per combination), but their
+*parameters* stay traced — a repair-policy grid over
+``auto_repair_time`` / ``manual_repair_time`` under Weibull or
+lognormal repairs compiles exactly one program, like any rate grid.
+See the backend module docstring for the exactness caveats of each
+engine.
 
 Special virtual parameter ``systematic_failure_rate_multiplier`` sets the
 systematic rate as a multiple of the (possibly swept) random rate, the way
@@ -142,8 +147,9 @@ class OneWaySweep:
 
     Every grid point runs ``n_replications`` replications through the
     engine dispatch layer (``engine="auto"`` batches all fast-path
-    points — exponential, Weibull, and bathtub failure models alike —
-    into one compiled program per hazard family; see docs/engines.md).
+    points — exponential, Weibull, bathtub, and lognormal failure
+    models with exponential or non-exponential repairs alike — into
+    one compiled program per family combination; see docs/engines.md).
     Results come back as a :class:`SweepResult` whose points carry full
     :class:`repro.core.metrics.Stat` dicts, pooled histograms, and CSV
     writers.

@@ -62,34 +62,58 @@ Event families (K_exp = 16): random failure x4 classes, systematic
 failure x4, auto-repair completion x4, manual completion x4.
 Deterministic (K_det = 2): job completion, recovery/host-selection timer.
 
-Non-exponential hazards: Weibull and bathtub failure processes run on
-this same fast path (``supports`` says yes; ``engine=auto`` dispatches
-here).  The scan carries a per-replica *phase age* — failure clocks
-restart whenever the job (re)starts, so every running server shares one
-age and the fleet's first failure is a single age-indexed intensity per
-health class (see :mod:`repro.core.hazards`).  Weibull failures are
-sampled by exact closed-form conditional inversion entering the event
-race as a deterministic residual; bathtub failures use piecewise-constant
-hazard majorization with Ogata-style thinning (accept/reject inside the
-compiled step, plus a window-expiry phantom timer).  The hazard family is
-a static compile switch: exponential grids keep the exact pre-existing
-program (same state, same uniform stream), and each family compiles one
-program per shape bucket.
+Non-exponential hazards: Weibull, bathtub, and lognormal failure
+processes run on this same fast path (``supports`` says yes;
+``engine=auto`` dispatches here).  The scan carries a per-replica *phase
+age* — failure clocks restart whenever the job (re)starts, so every
+running server shares one age and the fleet's first failure is a single
+age-indexed intensity per health class (see :mod:`repro.core.hazards`).
+Weibull failures are sampled by exact closed-form conditional inversion
+entering the event race as a deterministic residual; bathtub and
+lognormal failures use hazard majorization with Ogata-style thinning
+(accept/reject inside the compiled step, plus a window-expiry phantom
+timer) — bathtub bounds its convex shape at the window endpoints,
+lognormal bounds its unimodal hazard at the numerically-located mode
+clipped into the window.  The hazard family is a static compile switch:
+exponential grids keep the exact pre-existing program (same state, same
+uniform stream), and each family compiles one program per shape bucket.
+
+Non-exponential repairs: Weibull / lognormal / deterministic repair
+distributions run here too, via a per-replica *repair-slot* lane.
+Repair clocks differ from failure clocks in both ways that matter: they
+do NOT reset when the job restarts, and servers enter the shop at
+different times, so there is no shared age.  Each slot carries one
+in-repair server's (class, stage, remaining duration); the duration is
+sampled *at entry* by exact inverse CDF (the same family machinery the
+failure race uses — :class:`repro.core.hazards.HazardSampler`), exactly
+mirroring the event engine's ``RepairShop`` which draws the stage
+duration when the stage begins.  The minimum remaining time enters the
+event race as one more deterministic residual — placed FIRST so that an
+exact tie with job completion resolves repair-first, matching the event
+engine's heap order (the repair timeout was scheduled before the final
+phase's completion timeout).  Escalation re-arms the winning slot with
+a manual-stage draw.  The slot lane is auto-sized from the expected
+shop occupancy (``Params.repair_slots`` overrides); a full lane
+surfaces as the ``n_repair_overflow`` metric and a RuntimeWarning.
+Exponential repairs keep the original count-based compartments
+bit-for-bit (memoryless repairs need no per-server state).
 
 Known approximations vs the event-driven oracle (validated statistically
-in tests/test_vectorized.py and tests/test_nonexp.py):
+in tests/test_vectorized.py, tests/test_nonexp.py, and
+tests/test_repair_dist.py):
   * class-proportional sampling everywhere (exact under exchangeability);
   * misdiagnosis picks the wrong server proportionally over ALL running
     servers (the oracle excludes the failed one: O(1/4096) difference);
   * the initial bad-server split across pools uses its expectation.
 
 Out of scope (routed to core.simulation): retirement, bad-set
-regeneration, lognormal/deterministic/user-registered failure
-distributions, non-exponential repair distributions, failing standbys.
+regeneration, deterministic/user-registered failure distributions,
+user-registered repair distributions, failing standbys.
 """
 
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Dict, Optional
 
@@ -99,7 +123,6 @@ import numpy as np
 
 from repro.kernels import ops
 from . import hazards
-from .hazards import bathtub_shape, weibull_conditional_ttf
 from .histograms import HIST_CHANNELS
 from .params import Params
 
@@ -110,19 +133,22 @@ _METRICS = ("total_time", "n_failures", "n_random_failures",
             "n_systematic_failures", "n_preemptions", "n_auto_repairs",
             "n_manual_repairs", "n_failed_repairs", "n_host_selections",
             "n_standby_swaps", "n_undiagnosed", "n_misdiagnosed",
-            "stall_time", "recovery_overhead", "lost_work", "useful_work")
+            "stall_time", "recovery_overhead", "lost_work", "useful_work",
+            "n_repair_overflow")
 
 
 def supports(params: Params) -> bool:
     """Can the CTMC engine simulate these params exactly?
 
     True for the paper's exponential baseline *and* the age-dependent
-    Weibull / bathtub failure families (sampled on the fast path via
-    conditional inversion / hazard thinning — see
-    :mod:`repro.core.hazards`).  Repair distributions must stay
-    exponential, and the event-engine-only extensions (retirement,
-    bad-set regeneration, checkpoint rollback, failing standbys) must be
-    off.  ``engine="auto"`` falls back to the event engine whenever this
+    Weibull / bathtub / lognormal failure families (sampled on the fast
+    path via conditional inversion / hazard thinning) combined with
+    exponential / Weibull / lognormal / deterministic repair
+    distributions (sampled at shop entry via inverse CDF through the
+    repair-slot lane) — see :mod:`repro.core.hazards`.  The
+    event-engine-only extensions (retirement, bad-set regeneration,
+    checkpoint rollback, failing standbys) must be off.
+    ``engine="auto"`` falls back to the event engine whenever this
     returns False.
 
     >>> from repro.core import Params
@@ -131,15 +157,18 @@ def supports(params: Params) -> bool:
     >>> supports(Params(failure_distribution="weibull",
     ...                 distribution_kwargs={"k": 1.5}))      # wear-out
     True
-    >>> supports(Params(failure_distribution="bathtub"))
+    >>> supports(Params(failure_distribution="lognormal"))    # heavy tail
     True
-    >>> supports(Params(failure_distribution="lognormal"))    # event engine
+    >>> supports(Params(repair_distribution="weibull",
+    ...                 distribution_kwargs={"k": 0.7}))      # slow repairs
+    True
+    >>> supports(Params(failure_distribution="deterministic"))  # event engine
     False
     >>> supports(Params(retirement_threshold=3))
     False
     """
     return (hazards.hazard_kind(params) is not None
-            and params.repair_distribution.lower() == "exponential"
+            and hazards.repair_kind(params) is not None
             and params.retirement_threshold == 0
             and params.bad_set_regeneration_period == 0
             and params.checkpoint_interval == 0
@@ -177,7 +206,28 @@ def _initial_counts(p: Params):
     }
 
 
-def _initial_state_batch(pts, R: int, max_runs: int) -> Dict[str, jnp.ndarray]:
+def _age_dtype(p: Params):
+    """Dtype of the hazard-age / repair-countdown lanes.
+
+    The float64 carve-out (``Params.age_dtype``) needs the jax x64 flag;
+    without it jnp would silently downcast to float32, so requesting it
+    unenabled is a hard error rather than a quiet no-op.
+    """
+    if p.age_dtype == "float64":
+        if not jax.config.jax_enable_x64:
+            raise ValueError(
+                "Params.age_dtype='float64' requires the jax x64 flag: "
+                "set JAX_ENABLE_X64=1 or "
+                'jax.config.update("jax_enable_x64", True) before '
+                "simulating (float64 arrays silently degrade to float32 "
+                "otherwise)")
+        return jnp.float64
+    return jnp.float32
+
+
+def _initial_state_batch(pts, R: int, max_runs: int,
+                         rkind: str = "exponential",
+                         n_slots: int = 0) -> Dict[str, jnp.ndarray]:
     """Padded initial state for a structural grid, point-major (P*R, ...).
 
     All points share one compartment layout, so structural parameters
@@ -186,10 +236,14 @@ def _initial_state_batch(pts, R: int, max_runs: int) -> Dict[str, jnp.ndarray]:
     compartments a small point does not populate sit at zero occupancy and
     therefore carry zero rates — inert in the event race.  That padding is
     what lets one compiled program cover every structure in the grid.
+
+    ``rkind`` / ``n_slots`` size the repair-slot lane (non-exponential
+    repairs only): ``repair_rem`` +inf marks a free slot.
     """
     P = len(pts)
     B = P * R
     counts = [_initial_counts(p) for p in pts]
+    adt = _age_dtype(pts[0])
 
     def tile(key):
         arr = np.asarray([c[key] for c in counts], np.float32)   # (P, 4)
@@ -209,7 +263,14 @@ def _initial_state_batch(pts, R: int, max_runs: int) -> Dict[str, jnp.ndarray]:
     #: phase age: compute minutes since the job last (re)started — the
     #: hazard clock of the non-exponential families (inert for
     #: exponential, where the process is memoryless)
-    state["age"] = jnp.zeros((B,), jnp.float32)
+    state["age"] = jnp.zeros((B,), adt)
+    if rkind != "exponential":
+        # repair-slot lane: one (class, stage, remaining) triple per
+        # in-repair server; remaining counts down in wall-clock time and
+        # never resets with the job (unlike the failure age above)
+        state["repair_rem"] = jnp.full((B, n_slots), jnp.inf, adt)
+        state["repair_cls"] = jnp.zeros((B, n_slots), jnp.int32)
+        state["repair_stage"] = jnp.zeros((B, n_slots), jnp.int32)
     state["cur_run"] = jnp.zeros((B,), jnp.float32)
     state["n_runs"] = jnp.zeros((B,), jnp.int32)
     state["run_durations"] = jnp.zeros((B, max_runs), jnp.float32)
@@ -273,12 +334,47 @@ def _bucket_pad_state(state: Dict[str, jnp.ndarray], P: int, R: int,
 
 def _initial_state(p: Params, R: int,
                    max_runs: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    rkind = hazards.repair_kind(p) or "exponential"
     return _initial_state_batch(
-        [p], R, _max_runs_for([p]) if max_runs is None else max_runs)
+        [p], R, _max_runs_for([p]) if max_runs is None else max_runs,
+        rkind, _repair_slots_for([p], rkind))
 
 
 def _max_runs_for(pts) -> int:
     return max(p.max_run_records for p in pts)
+
+
+def _repair_slots_for(pts, rkind: str) -> int:
+    """Repair-slot lane width for a batched group (host-side, static).
+
+    Auto-sizing keeps the overflow probability astronomically small:
+    twice the expected shop occupancy (Little's law via the hazard-aware
+    event-rate estimate) plus eight standard deviations of the Poisson
+    in-shop count.  Rounded up to a power of two so repair-parameter
+    grids of similar scale share one compiled program — but never past
+    the physical bound (every server in repair at once), where overflow
+    is impossible and extra width is pure per-step cost: the slot
+    min/argmin/scatter ops are the lane's whole overhead.
+    ``Params.repair_slots > 0`` overrides per point.
+    """
+    if rkind == "exponential":
+        return 0
+    n = 1
+    for p in pts:
+        total = p.working_pool_size + p.spare_pool_size
+        if p.repair_slots > 0:
+            want = min(p.repair_slots, total)
+        else:
+            occ = hazards.expected_repair_occupancy(p)
+            # an infinite-mean repair stage (a disabled clock: the
+            # server never returns) drives the Little's-law estimate to
+            # inf/NaN; the physical cap is the honest answer there
+            if not math.isfinite(occ):
+                occ = float(total)
+            want = min(int(2.0 * occ + 8.0 * math.sqrt(max(occ, 1.0)) + 8.0),
+                       total)
+        n = max(n, min(_next_pow2(want), total))
+    return n
 
 
 def _pick_classes(counts: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
@@ -302,24 +398,28 @@ def _onehot(c: jnp.ndarray) -> jnp.ndarray:
 # one transition
 # ---------------------------------------------------------------------------
 
-def _n_uniforms(kind: str) -> int:
+def _n_uniforms(kind: str, rkind: str = "exponential") -> int:
     """Uniform draws per step: the exponential program keeps its
-    original 8-wide stream bit-for-bit; the hazard families add one
-    (Exp(1) inversion draw for weibull, accept/reject for bathtub)."""
-    return 8 if kind == "exponential" else 9
+    original 8-wide stream bit-for-bit; a non-exponential hazard family
+    adds one lane (Exp(1) inversion draw for weibull, accept/reject for
+    bathtub/lognormal) and a non-exponential repair family adds one
+    more (the entry/escalation duration draw)."""
+    return 8 + (kind != "exponential") + (rkind != "exponential")
 
 
 def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
           impl: Optional[str], kind: str = "exponential",
+          rkind: str = "exponential",
           hist_channels: tuple = HIST_CHANNELS) -> Dict[str, jnp.ndarray]:
     R = s["t"].shape[0]
-    u = jax.random.uniform(key_t, (R, _n_uniforms(kind)),
-                           minval=1e-12, maxval=1.0)
-    return _step_u(s, u, pv, impl, kind, hist_channels)
+    u = jax.random.uniform(key_t, (R, _n_uniforms(kind, rkind)),
+                           dtype=jnp.float32, minval=1e-12, maxval=1.0)
+    return _step_u(s, u, pv, impl, kind, rkind, hist_channels)
 
 
 def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
             impl: Optional[str], kind: str = "exponential",
+            rkind: str = "exponential",
             hist_channels: tuple = HIST_CHANNELS) -> Dict[str, jnp.ndarray]:
     """One CTMC transition for a batch of replicas.
 
@@ -327,13 +427,14 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     or a (B, n_cols) matrix with one parameter row per replica — the
     layout the batched sweep uses after flattening the (points x
     replicas) grid.  Columns 0..14 are the base model parameters;
-    columns 15.. are the hazard-family columns whose interpretation the
-    *static* ``kind`` selects (see :mod:`repro.core.hazards`).
+    columns 15..19 are the failure-hazard columns and 20..22 the repair
+    columns, whose interpretations the *static* ``kind`` / ``rkind``
+    select (see :mod:`repro.core.hazards`).
 
     ``hist_channels`` is the static tuple of histogram channels the scan
     state carries (must match ``s["hist"].shape[1]``).
     """
-    n_cols = 15 + hazards.N_HAZARD_COLS
+    n_cols = 15 + hazards.N_HAZARD_COLS + hazards.N_REPAIR_COLS
     if pv.ndim == 1:
         cols = [pv[i] for i in range(n_cols)]
         _c = lambda x: x            # param vs (B, 4) class arrays
@@ -343,23 +444,35 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     (r_rand, r_sys, recovery, host_sel, waiting, auto_t, man_t,
      auto_fail, man_fail, p_auto, dp, du, ckpt, preempt_cost,
      warm_standbys) = cols[:15]
-    hz = cols[15:]
+    hz = cols[15:15 + hazards.N_HAZARD_COLS]
+    rz = cols[15 + hazards.N_HAZARD_COLS:]
 
     u_time, u_pick, u_diag, u_wrong, u_cls, u_esc, u_succ, u_pool = (
         u[:, 0], u[:, 1], u[:, 2], u[:, 3], u[:, 4], u[:, 5], u[:, 6],
         u[:, 7])
-    u_haz = u[:, 8] if kind != "exponential" else None
+    lane = 8
+    u_haz = None
+    if kind != "exponential":
+        u_haz = u[:, lane]
+        lane += 1
+    u_dur = u[:, lane] if rkind != "exponential" else None
 
     computing = s["phase"] == COMPUTE
     in_overhead = s["phase"] == OVERHEAD
     stalled = s["phase"] == STALL
     active = s["phase"] != DONE
     age = s["age"]
+    # thinning families evaluate hazards on the float32 view: the
+    # float64 age carve-out targets the weibull inversion / repair
+    # countdown cancellations, not the (well-conditioned) hazard ratios
+    age32 = age.astype(jnp.float32)
 
     # ---- rates (R, 16) ------------------------------------------------
     run = s["run"]
-    bad_mask = jnp.asarray([0.0, 1.0, 0.0, 1.0])
-    haz_weights = g_bar = None
+    # explicit f32: under the x64 flag (age_dtype carve-out) an
+    # unannotated literal array would promote the whole rate matrix
+    bad_mask = jnp.asarray([0.0, 1.0, 0.0, 1.0], jnp.float32)
+    haz_weights = g_bar = hbar_r = hbar_s = None
     if kind == "weibull":
         # exact conditional inversion: the fleet's combined cumulative
         # hazard is C * age**k (all clocks share the shape k), so the
@@ -372,7 +485,7 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         w_rand = run * _c(c_rand) * computing[:, None]
         w_sys = run * bad_mask[None, :] * _c(c_sys) * computing[:, None]
         haz_weights = jnp.concatenate([w_rand, w_sys], axis=-1)  # (B, 8)
-        haz_resid = weibull_conditional_ttf(
+        haz_resid = hazards.FAILURE_SAMPLERS["weibull"].conditional_residual(
             age, haz_weights.sum(-1), w_k, -jnp.log(u_haz))
         fail_rand = jnp.zeros_like(run)
         fail_sys = jnp.zeros_like(run)
@@ -382,24 +495,63 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         # convexity of g) and race a window-expiry phantom timer W; a
         # winning candidate is accepted below with prob g(age + dt)/g_bar.
         b_if, b_ti, b_ws, b_tw, b_win = hz[0], hz[1], hz[2], hz[3], hz[4]
-        g_now = bathtub_shape(age, b_if, b_ti, b_ws, b_tw)
-        g_end = bathtub_shape(age + b_win, b_if, b_ti, b_ws, b_tw)
-        g_bar = jnp.maximum(g_now, g_end)
+        bt = hazards.FAILURE_SAMPLERS["bathtub"]
+        g_bar = bt.majorant(age32, b_win, (b_if, b_ti, b_ws, b_tw))
         fail_rand = run * _c(r_rand) * g_bar[..., None] * computing[:, None]
         fail_sys = run * bad_mask[None, :] * _c(r_sys) * g_bar[..., None] \
             * computing[:, None]
-        haz_resid = jnp.where(computing, b_win * jnp.ones_like(age),
+        haz_resid = jnp.where(computing, b_win * jnp.ones_like(age32),
+                              jnp.inf)
+    elif kind == "lognormal":
+        # Ogata thinning with the mode-located majorant: the lognormal
+        # hazard is unimodal, so sup h over [age, age + W] is h at the
+        # (numerically pre-located, traced) mode clipped into the
+        # window.  Random and systematic clocks have different scales
+        # and therefore different hazard *shapes* over age — each
+        # family carries its own majorant and acceptance ratio
+        # (thinning two independent NHPPs separately is exact).
+        ln = hazards.FAILURE_SAMPLERS["lognormal"]
+        l_sr, l_ss, l_sig, l_mode, l_win = hz[0], hz[1], hz[2], hz[3], hz[4]
+        hbar_r = ln.majorant(age32, l_win, (l_sr, l_sig, l_mode))   # (B,)
+        hbar_s = ln.majorant(age32, l_win, (l_ss, l_sig, l_mode))
+        fail_rand = run * hbar_r[:, None] * computing[:, None]
+        fail_sys = run * bad_mask[None, :] * hbar_s[:, None] \
+            * computing[:, None]
+        # both clocks disabled => zero window; disarm the expiry timer
+        # instead of racing a zero residual forever
+        win_eff = jnp.where(l_win > 0, l_win, jnp.inf)
+        haz_resid = jnp.where(computing, win_eff * jnp.ones_like(age32),
                               jnp.inf)
     else:
         fail_rand = run * _c(r_rand) * computing[:, None]
         fail_sys = run * bad_mask[None, :] * _c(r_sys) * computing[:, None]
         haz_resid = None
-    auto_rate = s["auto"] / jnp.maximum(_c(auto_t), 1e-9)
-    man_rate = s["man"] / jnp.maximum(_c(man_t), 1e-9)
+    if rkind == "exponential":
+        auto_rate = s["auto"] / jnp.maximum(_c(auto_t), 1e-9)
+        man_rate = s["man"] / jnp.maximum(_c(man_t), 1e-9)
+    else:
+        # non-exponential repairs complete through the slot lane's
+        # deterministic residual; the exponential repair channels carry
+        # no rate (the auto/man compartment counts remain bookkeeping)
+        auto_rate = jnp.zeros_like(run)
+        man_rate = jnp.zeros_like(run)
     rates = jnp.concatenate([fail_rand, fail_sys, auto_rate, man_rate],
                             axis=-1) * active[:, None]
 
-    resid_cols = [
+    # residual column order matters for exact ties (argmin takes the
+    # first): the repair-slot residual comes FIRST so a repair completing
+    # exactly at job completion resolves repair-first — the event
+    # engine's heap semantics (the repair timeout was scheduled before
+    # the final phase's completion timeout, so it pops first at equal
+    # timestamps).  The job then completes in the next step at dt=0.
+    resid_cols = []
+    roff = 0
+    if rkind != "exponential":
+        rep_rem = s["repair_rem"]
+        resid_cols.append(jnp.where(
+            active, rep_rem.min(-1).astype(jnp.float32), jnp.inf))
+        roff = 1
+    resid_cols += [
         jnp.where(computing, s["work_left"], jnp.inf),
         jnp.where(in_overhead, s["timer"], jnp.inf),
     ]
@@ -414,30 +566,55 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     is_fail = active & (ev < 8)
     is_sys = active & (ev >= 4) & (ev < 8)
     if kind == "weibull":
-        # the failure arrives on the hazard residual (K_EXP + 2); pick
-        # the failing channel from the hazard shares.  u_pick is only
-        # consumed by the race when an *exponential* channel wins, so it
-        # is fresh (and independent of dt) here.
+        # the failure arrives on the hazard residual (K_EXP + roff + 2);
+        # pick the failing channel from the hazard shares.  u_pick is
+        # only consumed by the race when an *exponential* channel wins,
+        # so it is fresh (and independent of dt) here.
         total_w = jnp.maximum(haz_weights.sum(-1), 1e-30)
         cdf8 = jnp.cumsum(haz_weights, axis=-1) / total_w[:, None]
         pick8 = jnp.minimum(
             jnp.sum((u_pick[:, None] >= cdf8).astype(jnp.int32), -1), 7)
-        haz_fail = active & (ev == K_EXP + 2)
+        haz_fail = active & (ev == K_EXP + roff + 2)
         is_fail = haz_fail
         is_sys = haz_fail & (pick8 >= 4)
         cls = jnp.where(haz_fail, pick8 % 4, cls).astype(jnp.int32)
     elif kind == "bathtub":
         # accept/reject: a rejected candidate (and the window-expiry
-        # event ev == K_EXP + 2) is a phantom — time and work advance,
-        # no state transition fires.
-        g_at = bathtub_shape(age + dt, hz[0], hz[1], hz[2], hz[3])
+        # event ev == K_EXP + roff + 2) is a phantom — time and work
+        # advance, no state transition fires.
+        g_at = hazards.FAILURE_SAMPLERS["bathtub"].hazard(
+            age32 + dt, (hz[0], hz[1], hz[2], hz[3]))
         accept = u_haz * g_bar < g_at
         is_fail = is_fail & accept
         is_sys = is_sys & accept
-    is_auto = active & (ev >= 8) & (ev < 12)
-    is_man = active & (ev >= 12) & (ev < 16)
-    is_complete = active & (ev == K_EXP)
-    is_timer = active & (ev == K_EXP + 1)
+    elif kind == "lognormal":
+        # accept a candidate with prob h_family(age + dt) / h_bar_family
+        ln = hazards.FAILURE_SAMPLERS["lognormal"]
+        h_r = ln.hazard(age32 + dt, (hz[0], hz[2]))
+        h_s = ln.hazard(age32 + dt, (hz[1], hz[2]))
+        cand_sys = (ev >= 4) & (ev < 8)
+        h_at = jnp.where(cand_sys, h_s, h_r)
+        h_bar = jnp.where(cand_sys, hbar_s, hbar_r)
+        accept = u_haz * h_bar < h_at
+        is_fail = is_fail & accept
+        is_sys = is_sys & accept
+    if rkind == "exponential":
+        is_auto = active & (ev >= 8) & (ev < 12)
+        is_man = active & (ev >= 12) & (ev < 16)
+    else:
+        # a slot repair completed: the winning slot's stage and class
+        # drive the same downstream completion logic the exponential
+        # channels feed (channels 8..16 are rateless here)
+        rows = jnp.arange(rep_rem.shape[0])
+        won_slot = jnp.argmin(rep_rem, axis=-1)
+        is_rep = active & (ev == K_EXP)
+        done_stage = s["repair_stage"][rows, won_slot]
+        cls = jnp.where(is_rep, s["repair_cls"][rows, won_slot],
+                        cls).astype(jnp.int32)
+        is_auto = is_rep & (done_stage == 0)
+        is_man = is_rep & (done_stage == 1)
+    is_complete = active & (ev == K_EXP + roff)
+    is_timer = active & (ev == K_EXP + roff + 1)
 
     ns = dict(s)
     ns["t"] = s["t"] + dt
@@ -582,6 +759,52 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     ns["recovery_overhead"] = ns["recovery_overhead"] \
         + jnp.where(to_stalled, recovery, 0.0)
 
+    # ---- repair-slot lane (non-exponential repairs) ----------------------
+    # repairs run on wall-clock time: every occupied slot counts down by
+    # dt through COMPUTE, OVERHEAD, and STALL alike, never resetting with
+    # the job.  A completion frees the winning slot (escalation re-arms
+    # it with a fresh manual-stage draw); a diagnosed failure claims the
+    # first free slot with an auto-stage draw.  Durations are sampled at
+    # entry by exact inverse CDF — precisely when the event engine's
+    # RepairShop samples them — through the shared HazardSampler
+    # machinery.  Entry and completion are mutually exclusive in one
+    # step (single event), so one duration lane (u_dur) serves both.
+    if rkind != "exponential":
+        rsampler = hazards.REPAIR_SAMPLERS[rkind]
+        adt = rep_rem.dtype
+        srows = jnp.arange(rep_rem.shape[0])
+        rem = jnp.where(active[:, None], rep_rem - dt.astype(adt)[:, None],
+                        rep_rem)
+        # completion (won_slot) and entry (first free slot) are mutually
+        # exclusive per step — a single event ended it — so one fused
+        # scatter per slot array covers both; the per-step slot cost is
+        # this min/argmin/scatter traffic, so fusing matters
+        free = jnp.isinf(rem)
+        any_free = free.any(-1)
+        fslot = jnp.argmax(free, axis=-1)
+        entered = diagnosed & any_free
+        rm_cls = jnp.where(wrong, picks[:, 0], cls).astype(jnp.int32)
+        # entry and escalation are mutually exclusive, so one quantile
+        # evaluation with the stage-selected scale column serves both
+        # (a second ndtri/pow per step is pure waste in the hot scan)
+        q_dur = rsampler.quantile(
+            u_dur, jnp.where(escalate, rz[1], rz[0]), rz[2]).astype(adt)
+        idx = jnp.where(is_rep, won_slot, fslot)
+        cur_rem = rem[srows, idx]
+        cur_stage = s["repair_stage"][srows, idx]
+        ns["repair_rem"] = rem.at[srows, idx].set(
+            jnp.where(finishes, jnp.inf,
+                      jnp.where(escalate | entered, q_dur, cur_rem)))
+        ns["repair_stage"] = s["repair_stage"].at[srows, idx].set(
+            jnp.where(escalate, 1, jnp.where(entered, 0, cur_stage)))
+        ns["repair_cls"] = s["repair_cls"].at[srows, idx].set(
+            jnp.where(entered, rm_cls, s["repair_cls"][srows, idx]))
+        # a full lane: the incoming server stays in the shop forever
+        # (bookkeeping-consistent but wrong); surfaced as a metric and a
+        # RuntimeWarning downstream — raise Params.repair_slots
+        ns["n_repair_overflow"] = s["n_repair_overflow"] \
+            + (diagnosed & ~any_free).astype(jnp.float32)
+
     # ---- streaming histograms -------------------------------------------
     # O(bins) distribution accumulators with no run-count bound (the ring
     # buffer above truncates; these do not).  Bin layout mirrors
@@ -628,7 +851,8 @@ def _params_vector(p: Params) -> jnp.ndarray:
         p.diagnosis_probability, p.diagnosis_uncertainty,
         p.checkpoint_interval, p.preemption_cost, float(p.warm_standbys),
     ], np.float32)
-    return jnp.asarray(np.concatenate([base, hazards.hazard_columns(p)]))
+    return jnp.asarray(np.concatenate([base, hazards.hazard_columns(p),
+                                       hazards.repair_columns(p)]))
 
 
 def default_max_steps(p: Params, safety: float = 2.0) -> int:
@@ -670,10 +894,10 @@ def _struct_key(p: Params):
 
 @partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "impl",
                                    "early_exit", "struct_key", "kind",
-                                   "hist_channels"))
+                                   "rkind", "hist_channels"))
 def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
                  chunk: int, n_chunks, rem: int, impl: Optional[str],
-                 early_exit: bool, struct_key, kind: str,
+                 early_exit: bool, struct_key, kind: str, rkind: str,
                  hist_channels: tuple,
                  init_state: Dict[str, jnp.ndarray]):
     """Chunked scan with early exit; batch axis is B = P * R (point-major).
@@ -694,15 +918,15 @@ def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
     def scan_body(state, u):
         if P > 1:
             u = jnp.tile(u, (P, 1))
-        return _step_u(state, u, pv, impl, kind, hist_channels), None
+        return _step_u(state, u, pv, impl, kind, rkind, hist_channels), None
 
     def run_chunk(state, i, n_steps):
         # one batched threefry call per chunk (a per-step split + draw is
-        # the dominant scan cost on CPU); the non-exponential hazard
-        # families draw one extra uniform lane per step
+        # the dominant scan cost on CPU); the non-exponential hazard /
+        # repair families draw extra uniform lanes per step
         us = jax.random.uniform(jax.random.fold_in(key, i),
-                                (n_steps, R_draw, _n_uniforms(kind)),
-                                minval=1e-12, maxval=1.0)
+                                (n_steps, R_draw, _n_uniforms(kind, rkind)),
+                                dtype=jnp.float32, minval=1e-12, maxval=1.0)
         if R_draw != R:
             us = us[:, :R]
         state, _ = jax.lax.scan(scan_body, state, us)
@@ -755,9 +979,10 @@ def compile_cache_size() -> Optional[int]:
 
 def _unsupported_error() -> ValueError:
     return ValueError(
-        "CTMC engine supports exponential, weibull, and bathtub failure "
-        "processes with exponential repairs (no retirement / "
-        "regeneration / checkpoint rollback / failing standbys / other "
+        "CTMC engine supports exponential/weibull/bathtub/lognormal "
+        "failure processes with exponential/weibull/lognormal/"
+        "deterministic repairs (no retirement / regeneration / "
+        "checkpoint rollback / failing standbys / user-registered "
         "distribution families); use core.simulation.simulate instead")
 
 
@@ -818,7 +1043,7 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
                        1, n_replicas, chunk, jnp.int32(max_steps // chunk),
                        max_steps % chunk, impl, early_exit,
                        _struct_key(params), hazards.hazard_kind(params),
-                       channels, init_state)
+                       hazards.repair_kind(params), channels, init_state)
     return _extract(out, channels=channels)
 
 
@@ -890,21 +1115,26 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
 
     groups: Dict[tuple, list] = {}
     for i, p in enumerate(params_list):
-        # the hazard family is a static compile switch (it changes the
-        # step program and the uniform-stream width), so a grid mixing
-        # families splits into one batch per family; within a family,
-        # structure padding keeps the whole sub-grid one compilation
-        # (struct_key None -> one jit cache entry).  Hazard *parameters*
-        # (k, taus, rates) stay traced, so they never split a group.
+        # the hazard and repair families are static compile switches
+        # (they change the step program and the uniform-stream width),
+        # so a grid mixing families splits into one batch per
+        # (failure, repair, age-dtype) combination; within a
+        # combination, structure padding keeps the whole sub-grid one
+        # compilation (struct_key None -> one jit cache entry).  Hazard
+        # AND repair *parameters* (k, taus, rates, repair scales/means)
+        # stay traced, so they never split a group — a repair-rate grid
+        # compiles exactly once.
         kind = hazards.hazard_kind(p)
-        gkey = (kind, None) if padded else (kind, _struct_key(p))
+        rkind = hazards.repair_kind(p)
+        gkey = (kind, rkind, p.age_dtype,
+                None if padded else _struct_key(p))
         groups.setdefault(gkey, []).append(i)
     mr = _max_runs_for(params_list) if max_runs is None else max_runs
 
     bucket = padded and bucketed
     channels = _hist_channels(params_list)
     results: list = [None] * len(params_list)
-    for (kind, skey), idxs in groups.items():
+    for (kind, rkind, _adt, skey), idxs in groups.items():
         pts = [params_list[i] for i in idxs]
         P, R = len(pts), n_replicas
         steps = max_steps or max(default_max_steps(p) for p in pts)
@@ -925,12 +1155,13 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
             # edge-padding avoids NaNs entering the race at all)
             pv = jnp.pad(pv, ((0, P_run - P), (0, 0)), mode="edge")
         pv_flat = jnp.repeat(pv, R_run, axis=0)       # (P_run*R_run, n_cols)
-        init_state = _initial_state_batch(pts, R, mr)
+        init_state = _initial_state_batch(pts, R, mr, rkind,
+                                          _repair_slots_for(pts, rkind))
         if (P_run, R_run) != (P, R):
             init_state = _bucket_pad_state(init_state, P, R, P_run, R_run)
         out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P_run, R_run,
                            chunk, jnp.int32(steps // chunk), steps % chunk,
-                           impl, early_exit, skey, kind, channels,
+                           impl, early_exit, skey, kind, rkind, channels,
                            init_state)
         for j, i in enumerate(idxs):
             rows = (slice(j * R_run, j * R_run + R) if R_run == R

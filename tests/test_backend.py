@@ -24,11 +24,12 @@ def test_auto_resolves_ctmc_for_default_model():
 @pytest.mark.parametrize("params", [
     BASE.replace(checkpoint_interval=60.0),
     BASE.replace(retirement_threshold=3),
-    # weibull/bathtub *failure* processes run on the CTMC fast path now
-    # (tests/test_nonexp.py); lognormal failures and non-exponential
-    # repairs still fall back
-    BASE.replace(failure_distribution="lognormal"),
-    BASE.replace(repair_distribution="weibull"),
+    # weibull/bathtub/lognormal failures and weibull/lognormal/
+    # deterministic repairs run on the CTMC fast path now
+    # (tests/test_nonexp.py, tests/test_repair_dist.py); deterministic
+    # failures and user-registered families still fall back
+    BASE.replace(failure_distribution="deterministic"),
+    BASE.replace(bad_set_regeneration_period=1440.0),
     BASE.replace(standbys_can_fail=True),
 ])
 def test_auto_falls_back_to_event(params):

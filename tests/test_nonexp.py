@@ -72,9 +72,12 @@ def test_supported_families_and_dispatch():
     assert supports(WEIBULL) and supports(BATHTUB)
     assert resolve_engine(WEIBULL, "auto") == "ctmc"
     assert resolve_engine(BATHTUB, "auto") == "ctmc"
-    # still outside the envelope: other families, non-exponential repairs
-    assert not supports(WEIBULL.replace(failure_distribution="lognormal"))
-    assert not supports(WEIBULL.replace(repair_distribution="weibull"))
+    # lognormal failures and non-exponential repairs joined the fast
+    # path (tests/test_repair_dist.py); user-registered families and
+    # degenerate parameterizations are still outside the envelope
+    assert supports(WEIBULL.replace(failure_distribution="lognormal"))
+    assert supports(WEIBULL.replace(repair_distribution="weibull"))
+    assert not supports(WEIBULL.replace(failure_distribution="deterministic"))
     assert hazard_kind(WEIBULL.replace(
         distribution_kwargs={"k": -1.0})) is None
 

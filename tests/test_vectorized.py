@@ -66,12 +66,14 @@ def test_zero_failures_exact():
 
 def test_unsupported_params_rejected():
     assert not supports(Params(retirement_threshold=3))
-    # weibull/bathtub are on the fast path now; lognormal and
-    # non-exponential repairs still are not (tests/test_nonexp.py covers
-    # the supported families)
-    assert not supports(Params(failure_distribution="lognormal"))
-    assert not supports(Params(failure_distribution="weibull",
-                               repair_distribution="weibull"))
+    # weibull/bathtub/lognormal failures AND weibull/lognormal/
+    # deterministic repairs are on the fast path now (tests/test_nonexp.py
+    # and tests/test_repair_dist.py); deterministic/user-registered
+    # *failure* processes and user-registered repairs still fall back
+    assert supports(Params(failure_distribution="lognormal"))
+    assert supports(Params(failure_distribution="weibull",
+                           repair_distribution="weibull"))
+    assert not supports(Params(failure_distribution="deterministic"))
     assert not supports(Params(checkpoint_interval=60.0))
     with pytest.raises(ValueError):
         simulate_ctmc(Params(retirement_threshold=3), n_replicas=4)
