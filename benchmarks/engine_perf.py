@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MINUTES_PER_DAY, OneWaySweep, Params, simulate
+from repro.core import (MINUTES_PER_DAY, Campaign, CampaignEvent,
+                        FaultTopology, OneWaySweep, Params, simulate)
 from repro.core.vectorized import default_max_steps, simulate_ctmc
 from repro.kernels import ops
 
@@ -296,6 +297,68 @@ def repair_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
     }
 
 
+def correlated_bench_params(job_length: float = None) -> Params:
+    """The correlated-failure benchmark scenario, shared with the CI
+    quick gate (scripts/check_bench.py): a 256-server job under
+    *lognormal* failure times (the realistic heavy-tailed hazard, where
+    the event engine pays O(cluster) Python-level draws per restart and
+    the CTMC samples by compiled conditional inversion) with a 16-rack /
+    4-racks-per-pod topology — the 320-server fleet stripes to exactly
+    20 per rack, so the CTMC fleet-fraction kill is the exact
+    expectation in every pool — stochastic rack+pod shocks, a scripted
+    mid-run rack kill, and a maintenance window pausing the repair
+    shop.  Campaign times scale with the job length so the quick gate
+    can shrink the scenario without pushing the kill past the horizon."""
+    base = Params(job_size=256, working_pool_size=288, spare_pool_size=32,
+                  warm_standbys=8, job_length=2 * MINUTES_PER_DAY,
+                  random_failure_rate=0.25 / MINUTES_PER_DAY,
+                  failure_distribution="lognormal",
+                  distribution_kwargs={"sigma": 1.0}, seed=0)
+    if job_length is not None:
+        base = base.replace(job_length=job_length)
+    topo = FaultTopology(n_racks=16, racks_per_pod=4,
+                         rack_shock_rate=1e-4, pod_shock_rate=2e-5)
+    camp = Campaign(events=(
+        CampaignEvent(time=0.25 * base.job_length, kind="kill", domain=3),
+        CampaignEvent(time=0.5 * base.job_length, kind="maintenance",
+                      duration=0.05 * base.job_length),
+    ))
+    return base.replace(fault_domains=topo, campaign=camp)
+
+
+def correlated_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
+                                ) -> Dict[str, object]:
+    """Shock-rate grid through both engines under the full scenario
+    (stochastic domain shocks + scripted kill + maintenance window).
+
+    The scenario's *structure* (domain count, campaign codes) is a
+    static compile key while every rate, fraction, and time is traced,
+    so the whole grid must compile exactly one XLA program
+    (``sweep_compiles``) — and the event engine pays per-injection
+    Python work per trajectory, so the batched scan's warm speedup
+    floor for this entry is >= 5x (scripts/check_bench.py gates both).
+    """
+    from repro.core import vectorized
+
+    base = correlated_bench_params().replace(
+        max_run_records=73)   # bench-unique jit shapes
+    values = [float(v) for v in np.linspace(2e-5, 2e-4, n_points)]
+    c0 = vectorized.compile_cache_size()
+    out = _engine_ab_sweep(base, n_points, n_replicas, "correlated-bench",
+                           parameter="rack_shock_rate", values=values)
+    c1 = vectorized.compile_cache_size()
+    return {
+        "failure_distribution": base.failure_distribution,
+        "distribution_kwargs": dict(base.distribution_kwargs),
+        "topology": {"n_racks": base.fault_domains.n_racks,
+                     "racks_per_pod": base.fault_domains.racks_per_pod,
+                     "pod_shock_rate": base.fault_domains.pod_shock_rate},
+        "campaign_events": len(base.campaign.events),
+        "sweep_compiles": None if c0 is None else c1 - c0,
+        **out,
+    }
+
+
 def repair_smoke(n_replicas: int = 24) -> Dict[str, object]:
     """CI guard: a repair-parameter grid under non-exponential repairs
     must compile exactly one XLA program (repair scales/means stay
@@ -485,13 +548,15 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
     sw["bucketing"] = bucketed_sweep_throughput()
     sw["nonexp"] = weibull_sweep_throughput()
     sw["repair_dist"] = repair_sweep_throughput()
-    sections = ("points", "structural", "bucketing", "nonexp", "repair_dist")
+    sw["correlated"] = correlated_sweep_throughput()
+    sections = ("points", "structural", "bucketing", "nonexp", "repair_dist",
+                "correlated")
     print(json.dumps({k: v for k, v in sw.items() if k not in sections},
                      indent=2))
     print(json.dumps({k: v for k, v in sw["structural"].items()
                       if k != "points"}, indent=2))
     print(json.dumps(sw["bucketing"], indent=2))
-    for sec in ("nonexp", "repair_dist"):
+    for sec in ("nonexp", "repair_dist", "correlated"):
         print(json.dumps({k: v for k, v in sw[sec].items()
                           if k != "points"}, indent=2))
     print("wrote", write_sweep_artifact(sw))

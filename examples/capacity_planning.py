@@ -45,6 +45,9 @@ parser.add_argument("--hazard", choices=("exponential", "bathtub"),
 parser.add_argument("--repairs", choices=("exponential", "lognormal"),
                     default="lognormal",
                     help="repair family for the repair-policy what-if")
+parser.add_argument("--shock", choices=("off", "on"), default="on",
+                    help="correlated-failure what-if: rack-shock-rate "
+                         "sweep under a 40-rack topology")
 args = parser.parse_args()
 
 N_REP = 64 if args.fast else 256
@@ -187,3 +190,52 @@ if args.repairs == "lognormal":
           "(compare p99 against the mean-matched exponential model) — "
           "the spare-capacity margin has to cover the tail, not the "
           "mean, which is exactly what the percentile columns price in.")
+
+# ---------------------------------------------------------------------------
+# what-if: correlated failure domains (docs/scenarios.md)
+# ---------------------------------------------------------------------------
+if args.shock == "on":
+    from repro.core import FaultTopology
+
+    # 4360-server fleet / 40 racks = 109 per rack, exact striping; the
+    # shock rates are traced, so the whole grid is one compiled program
+    shocked = base.replace(
+        job_length=min(args.job_days, 8.0) * MINUTES_PER_DAY,
+        fault_domains=FaultTopology(n_racks=40, racks_per_pod=8))
+    n_rep_sh = max(N_REP // 4, 32)
+    rates = [0.0, 2e-6, 5e-6, 1e-5]
+    print(f"\n=== what-if: correlated rack outages (40 racks, whole-rack "
+          f"shocks), rack_shock_rate sweep, engine=auto, {n_rep_sh} reps "
+          f"===")
+    sh_rows = []
+    for point in OneWaySweep("capacity-shock", "rack_shock_rate", rates,
+                             n_replications=n_rep_sh, base_params=shocked,
+                             engine="auto").run().points:
+        sh_rows.append({
+            "rate": point.values["rack_shock_rate"],
+            "engine": point.engine,     # "ctmc": scenario fast path
+            "hours": point.stats["total_time"].mean / 60,
+            "shocks": point.stats["n_domain_shocks"].mean,
+            "killed": point.stats["n_shock_killed"].mean,
+            "stall_h": point.stats["stall_time"].mean / 60,
+            "preempt": point.stats["n_preemptions"].mean,
+        })
+    print(f"{'rate/min':>9} {'engine':>7} {'train h':>9} {'shocks':>7} "
+          f"{'killed':>7} {'stall h':>8} {'preempts':>9}")
+    for r in sh_rows:
+        print(f"{r['rate']:>9.0e} {r['engine']:>7} {r['hours']:>9.1f} "
+              f"{r['shocks']:>7.2f} {r['killed']:>7.1f} "
+              f"{r['stall_h']:>8.2f} {r['preempt']:>9.2f}")
+    assert all(r["engine"] == "ctmc" for r in sh_rows), \
+        "shock grid should ride the scenario fast path via auto"
+    base_h = sh_rows[0]["hours"]
+    worst = sh_rows[-1]
+    print(f"\nA whole-rack outage kills 109 servers at once — the job, "
+          f"its standbys, and its spares lose their rack stripe "
+          f"together.  At {worst['rate']:.0e}/min per rack the shocks "
+          f"cost {worst['hours'] - base_h:+.1f} train hours vs the "
+          f"uncorrelated baseline; spare capacity sized for i.i.d. "
+          f"failures underestimates the burst draw (compare the "
+          f"preemption column).  Scripted campaigns (exact kill times, "
+          f"maintenance windows) cover the deterministic side — see "
+          f"docs/scenarios.md.")

@@ -39,12 +39,15 @@ FULL_SPEEDUP_FLOORS = {
     "speedup_x": 3.0,            # exponential baseline sweep
     "nonexp.speedup_x": 5.0,     # weibull failure grid
     "repair_dist.speedup_x": 5.0,   # repair-policy grid (acceptance)
+    "correlated.speedup_x": 5.0,    # fault-domain scenario grid (acceptance)
 }
 
 #: exact compile-count invariants of the full artifact
 FULL_COMPILE_GATES = {
     "structural.padded_compiles": 1,
     "bucketing.bucketed_compiles": 1,
+    # the scenario's rates/times are traced: one program per shock grid
+    "correlated.sweep_compiles": 1,
 }
 
 _FAILURES = []
@@ -132,6 +135,23 @@ def run_quick(baseline: dict, tolerance: float) -> None:
           f"{'MISSING' if b_rep is None else f'{b_rep:.2f}x'} (8x256); "
           f"floor {tolerance:.2f}x of committed")
 
+    # the correlated-failure scenario (shared factory again): domain
+    # shocks + a scripted kill + a maintenance window, swept over the
+    # rack shock rate — the gate that catches the scenario race lanes
+    # silently knocking the grid off the single-program fast path
+    from benchmarks.engine_perf import correlated_bench_params
+
+    cbase = correlated_bench_params(
+        job_length=0.5 * MINUTES_PER_DAY).replace(max_run_records=63)
+    q_cor = _quick_ab(cbase, "rack_shock_rate",
+                      [5e-5, 1e-4, 1.5e-4, 2e-4], 64)
+    b_cor = _lookup(baseline, "correlated.speedup_x")
+    _gate("quick.correlated_speedup",
+          b_cor is not None and q_cor >= tolerance * b_cor,
+          f"measured {q_cor:.2f}x warm (4x64 grid) vs committed "
+          f"{'MISSING' if b_cor is None else f'{b_cor:.2f}x'} (8x256); "
+          f"floor {tolerance:.2f}x of committed")
+
 
 # ---------------------------------------------------------------------------
 # full mode
@@ -154,7 +174,8 @@ def run_full(fresh: dict, baseline: dict, rel_tolerance: float) -> None:
         # count cannot be measured, which is not a regression
         _gate(f"full.{key}", val is None or val == want,
               f"{val} == {want} (None = unmeasurable, tolerated)")
-    for sec in ("", "structural.", "nonexp.", "repair_dist."):
+    for sec in ("", "structural.", "nonexp.", "repair_dist.",
+                "correlated."):
         key = f"{sec}max_abs_z"
         val = _lookup(fresh, key)
         _gate(f"full.{key}", val is not None and val < 4.0,
@@ -174,6 +195,8 @@ def append_history(fresh: dict, path: str) -> None:
         "bucketing_compiles": _lookup(fresh, "bucketing.bucketed_compiles"),
         "nonexp_speedup_x": _lookup(fresh, "nonexp.speedup_x"),
         "repair_dist_speedup_x": _lookup(fresh, "repair_dist.speedup_x"),
+        "correlated_speedup_x": _lookup(fresh, "correlated.speedup_x"),
+        "correlated_compiles": _lookup(fresh, "correlated.sweep_compiles"),
     }
     with open(path, "a") as f:
         f.write(json.dumps(record) + "\n")

@@ -56,7 +56,8 @@ python -m pytest -x -q -p no:randomly ${JUNIT_ARGS[@]+"${JUNIT_ARGS[@]}"}
 python -m pytest -q -p no:randomly -p no:cacheprovider --doctest-modules \
     src/repro/core/params.py src/repro/core/histograms.py \
     src/repro/core/backend.py src/repro/core/sweeps.py \
-    src/repro/core/vectorized.py src/repro/core/hazards.py
+    src/repro/core/vectorized.py src/repro/core/hazards.py \
+    src/repro/core/faultdomains.py
 
 # docs suite link check: every relative markdown link in README/docs
 # must resolve to a real file (no network; scheme links are skipped)
@@ -67,7 +68,7 @@ python scripts/check_links.py
 # cache — exactly what a `pytest --lf` retry after a failure would run
 python -m pytest -q -p no:randomly -p no:cacheprovider \
     tests/test_histograms.py tests/test_bucketing.py tests/test_nonexp.py \
-    tests/test_repair_dist.py
+    tests/test_repair_dist.py tests/test_faultdomains.py
 
 # compile-count smokes: a tiny mixed-structure grid must compile exactly
 # one XLA program per padded group, two same-bucket sweeps of different

@@ -15,6 +15,7 @@ implemented as a composable library:
   * :mod:`analytical`    — closed-form cross-checks + Young/Daly cadence
   * :mod:`vectorized`    — JAX CTMC engine for massive parameter sweeps
   * :mod:`hazards`       — non-exponential hazard math for the fast path
+  * :mod:`faultdomains`  — correlated failure domains + injection campaigns
   * :mod:`histograms`    — streaming distribution telemetry (both engines)
   * :mod:`backend`       — engine dispatch (auto | event | ctmc)
 
@@ -37,6 +38,8 @@ from .distributions import (Deterministic, Distribution, Exponential,
 from .backend import (Replications, resolve_engine, run_replications,
                       run_replications_batch)
 from .engine import Environment, Event, Interrupt, Process, Timeout
+from .faultdomains import (Campaign, CampaignEvent, FaultTopology,
+                           ShockInjector)
 from .hazards import hazard_kind
 from .histograms import (HIST_CHANNELS, Histogram, HistogramSpec,
                          percentiles_per_row)
@@ -48,9 +51,11 @@ from .simulation import ClusterSimulation, simulate, simulate_one
 from .sweeps import OneWaySweep, SweepResult, TwoWaySweep, load_experiment
 
 __all__ = [
-    "Bathtub", "CheckpointPlan", "ClusterSimulation", "Deterministic",
-    "Distribution", "Environment", "Event", "Exponential", "HIST_CHANNELS",
-    "Histogram", "HistogramSpec", "Interrupt",
+    "Bathtub", "Campaign", "CampaignEvent", "CheckpointPlan",
+    "ClusterSimulation", "Deterministic",
+    "Distribution", "Environment", "Event", "Exponential", "FaultTopology",
+    "HIST_CHANNELS",
+    "Histogram", "HistogramSpec", "Interrupt", "ShockInjector",
     "JobSpec", "LogNormal", "MINUTES_PER_DAY", "MultiJobResult",
     "MultiJobSimulation", "OneWaySweep", "PAPER_TABLE1_RANGES", "Params",
     "Process", "Replications", "RunResult", "Stat", "SweepResult", "Timeout",

@@ -84,7 +84,8 @@ def _from_arrays(arrays: Dict[str, np.ndarray], n: int) -> Replications:
         warnings.warn(
             f"{incomplete}/{n} CTMC replicas hit the step budget before "
             "finishing the job; means are biased low — raise max_steps "
-            "(stats carry a 'completed' entry with the finished fraction)",
+            "(truncation is surfaced as the 'n_incomplete' metric and the "
+            "'completed' fraction in stats and sweep CSVs)",
             RuntimeWarning, stacklevel=3)
     overflows = int(arrays.get("n_repair_overflow", np.zeros(1)).sum())
     if overflows:

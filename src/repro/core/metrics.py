@@ -42,6 +42,14 @@ class RunResult:
     #: lane full (see ``Params.repair_slots``).  The event engine has no
     #: slot bound, so this is exactly zero on the event path.
     n_repair_overflow: int = 0
+    #: correlated-failure counters (see repro.core.faultdomains): shock
+    #: events, servers killed by shocks/campaign kills (all compartments,
+    #: in-shop re-breaks included), and campaign schedule entries fired
+    n_domain_shocks: int = 0
+    n_shock_killed: int = 0
+    n_campaign_events: int = 0
+    #: per-domain shock counts ([] unless Params.fault_domains is set)
+    domain_shocks: List[int] = field(default_factory=list)
     stall_time: float = 0.0            # job waiting with zero capacity
     recovery_overhead: float = 0.0     # sum of recovery_time charges
     lost_work: float = 0.0             # checkpoint-rollback loss (extension)
@@ -68,11 +76,21 @@ class RunResult:
     def mean_run_duration(self) -> float:
         return float(np.mean(self.run_durations)) if self.run_durations else 0.0
 
+    @property
+    def n_incomplete(self) -> int:
+        """1 if this replication hit max_sim_time (or, on the CTMC
+        engine, the step budget) before finishing the job — the scalar
+        twin of ``timed_out`` so truncation shows up in aggregate stats
+        and sweep CSV columns, not just a RuntimeWarning."""
+        return int(self.timed_out)
+
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["mean_run_duration"] = self.mean_run_duration
         d["overhead_fraction"] = self.overhead_fraction
-        for k in ("run_durations", "recovery_durations", "waiting_durations"):
+        d["n_incomplete"] = self.n_incomplete
+        for k in ("run_durations", "recovery_durations", "waiting_durations",
+                  "domain_shocks"):
             del d[k]
         return d
 
@@ -88,8 +106,10 @@ _SCALAR_METRICS = (
     "total_time", "n_failures", "n_random_failures", "n_systematic_failures",
     "n_preemptions", "n_auto_repairs", "n_manual_repairs", "n_failed_repairs",
     "n_host_selections", "n_standby_swaps", "n_retired", "n_undiagnosed",
-    "n_misdiagnosed", "n_repair_overflow", "stall_time", "recovery_overhead",
-    "lost_work", "mean_run_duration", "overhead_fraction",
+    "n_misdiagnosed", "n_repair_overflow", "n_domain_shocks",
+    "n_shock_killed", "n_campaign_events", "n_incomplete", "stall_time",
+    "recovery_overhead", "lost_work", "mean_run_duration",
+    "overhead_fraction",
 )
 
 _PERCENTILES = (25, 50, 75, 90, 99)
@@ -294,6 +314,11 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray],
             1.0 - np.asarray(arrays["useful_work"], np.float64) / safe_total,
             0.0),
     }
+    if "completed" in arrays:
+        # per-replica truncation indicator: the scalar twin of the
+        # backend's step-budget RuntimeWarning (satellite of ISSUE 6)
+        derived["n_incomplete"] = 1.0 - np.asarray(arrays["completed"],
+                                                   np.float64)
     exact = "run_durations" in arrays and "n_runs" in arrays
     if exact:
         buf = np.asarray(arrays["run_durations"], np.float64)

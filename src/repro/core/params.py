@@ -15,6 +15,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
+from .faultdomains import Campaign, FaultTopology
 from .histograms import HistogramSpec
 
 MINUTES_PER_DAY = 24 * 60
@@ -143,6 +144,16 @@ class Params:
     #: metric (the overflowing server stays in the shop forever) — raise
     #: this if that ever fires.  Exponential repairs ignore it.
     repair_slots: int = 0
+    #: correlated failure domains: a rack → pod topology with per-level
+    #: exponential shock rates.  A shock atomically fails every server
+    #: in the struck domain (running, spare, and in-repair alike).
+    #: ``None`` (default) disables correlated failures entirely.  See
+    #: :mod:`repro.core.faultdomains` and docs/scenarios.md.
+    fault_domains: Optional[FaultTopology] = None
+    #: scripted fault-injection campaign: a validated schedule of timed
+    #: ``kill domain d at t`` and repair-shop maintenance windows,
+    #: honored exactly by both engines.  ``None`` disables.
+    campaign: Optional[Campaign] = None
 
     # -------------------------------------------------------------------------
     def validate(self) -> None:
@@ -178,6 +189,11 @@ class Params:
             raise ValueError("repair_slots must be non-negative")
         if self.histogram is not None:
             self.histogram.validate()
+        if self.fault_domains is not None:
+            self.fault_domains.validate(
+                self.working_pool_size + self.spare_pool_size)
+        if self.campaign is not None:
+            self.campaign.validate(self.fault_domains)
 
     def replace(self, **kwargs) -> "Params":
         return dataclasses.replace(self, **kwargs)
@@ -210,6 +226,10 @@ class Params:
             raise ValueError(f"unknown Params fields: {sorted(unknown)}")
         if isinstance(d.get("histogram"), dict):   # to_dict/yaml round trip
             d = dict(d, histogram=HistogramSpec.from_dict(d["histogram"]))
+        if isinstance(d.get("fault_domains"), dict):
+            d = dict(d, fault_domains=FaultTopology(**d["fault_domains"]))
+        if isinstance(d.get("campaign"), dict):
+            d = dict(d, campaign=Campaign(**d["campaign"]))
         return cls(**d)
 
 

@@ -47,6 +47,21 @@ class PoolManager:
         server = self.spare_free.pop()
         return server
 
+    def remove(self, server: Server) -> bool:
+        """Take a *specific* free server out of its pool (domain kills).
+
+        Returns False if the server is not currently sitting in a free
+        list — e.g. it was popped by an in-flight replacement
+        acquisition and is in limbo between pool and job.
+        """
+        for lst in (self.working_free, self.spare_free):
+            try:
+                lst.remove(server)
+                return True
+            except ValueError:
+                pass
+        return False
+
     # -- release -----------------------------------------------------------
     def push(self, server: Server) -> None:
         """Return a server to its origin pool and notify watchers."""

@@ -24,7 +24,7 @@ from typing import Callable, Optional, Tuple
 import numpy as np
 
 from .distributions import Distribution, make_distribution
-from .engine import Environment
+from .engine import Environment, Event, Interrupt
 from .metrics import RunResult
 from .params import Params
 from .server import Server, ServerState
@@ -60,6 +60,11 @@ class RepairShop:
         self.on_retire = on_retire
         self.in_repair: set = set()
         self._auto_dist, self._manual_dist = repair_distributions(params)
+        #: sid -> live repair Process (fault-domain rebreaks / maintenance
+        #: pauses need a handle to interrupt specific stages)
+        self._procs: dict = {}
+        self._paused = False
+        self._resume_events: list = []
 
     # -- public API ----------------------------------------------------------
     def submit(self, server: Server) -> None:
@@ -67,12 +72,70 @@ class RepairShop:
         if server in self.in_repair:
             raise RuntimeError(f"{server!r} already in repair")
         self.in_repair.add(server)
-        self.env.process(self._repair_process(server),
-                         name=f"repair-{server.sid}")
+        self._procs[server.sid] = self.env.process(
+            self._repair_process(server), name=f"repair-{server.sid}")
 
     @property
     def n_in_repair(self) -> int:
         return len(self.in_repair)
+
+    # -- fault-domain hooks (see repro.core.faultdomains) --------------------
+    def pause(self) -> None:
+        """Maintenance window opens: freeze every in-flight repair stage.
+
+        Stages keep their remaining duration and resume where they left
+        off when :meth:`resume` fires (the CTMC engine gates the same
+        window by zeroing repair rates, exact-in-law for exponentials).
+        """
+        self._paused = True
+        for proc in list(self._procs.values()):
+            if proc.is_alive and proc._target is not None:
+                proc.interrupt("pause")
+
+    def resume(self) -> None:
+        """Maintenance window closes: paused stages pick back up."""
+        self._paused = False
+        for evt in self._resume_events:
+            if not evt.triggered:
+                evt.succeed()
+        self._resume_events.clear()
+
+    def rebreak(self, server: Server) -> None:
+        """A domain shock struck a server already in the shop: its current
+        repair stage restarts with a fresh draw.  Exact-in-law a no-op
+        under exponential repairs (memorylessness); real progress loss
+        under Weibull / lognormal / deterministic repairs."""
+        proc = self._procs.get(server.sid)
+        if proc is not None and proc.is_alive and proc._target is not None:
+            proc.interrupt("rebreak")
+
+    def _stage_wait(self, dist: Distribution):
+        """Serve one repair stage, honoring pauses and re-breaks.
+
+        The duration is sampled *before* the pause check so a run whose
+        campaign never fires consumes the RNG stream in exactly the
+        baseline order (the zero-rate reduction tests rely on this).
+        """
+        remaining = dist.sample(self.rng)
+        while True:
+            if self._paused:
+                evt: Event = self.env.event()
+                self._resume_events.append(evt)
+                try:
+                    yield evt
+                except Interrupt as itr:
+                    if itr.cause == "rebreak":
+                        remaining = dist.sample(self.rng)
+                continue
+            start = self.env.now
+            try:
+                yield self.env.timeout(remaining)
+                return
+            except Interrupt as itr:
+                if itr.cause == "rebreak":
+                    remaining = dist.sample(self.rng)
+                else:  # pause: keep whatever stage time is left
+                    remaining = max(remaining - (self.env.now - start), 0.0)
 
     # -- pipeline ----------------------------------------------------------
     def _repair_process(self, server: Server):
@@ -81,7 +144,7 @@ class RepairShop:
 
         # Stage 1: automated testing + repair (always attempted first).
         server.state = ServerState.REPAIR_AUTO
-        yield self.env.timeout(self._auto_dist.sample(rng))
+        yield from self._stage_wait(self._auto_dist)
         self.metrics.n_auto_repairs += 1
 
         if rng.random() < p.automated_repair_probability:
@@ -90,7 +153,7 @@ class RepairShop:
         else:
             # Beyond automated scope -> manual repair (assumption 3).
             server.state = ServerState.REPAIR_MANUAL
-            yield self.env.timeout(self._manual_dist.sample(rng))
+            yield from self._stage_wait(self._manual_dist)
             self.metrics.n_manual_repairs += 1
             success = rng.random() >= p.manual_repair_failure_probability
 
@@ -101,6 +164,7 @@ class RepairShop:
             self.metrics.n_failed_repairs += 1
 
         self.in_repair.discard(server)
+        self._procs.pop(server.sid, None)
 
         # Score-based retirement (extension; off when threshold == 0).
         if (p.retirement_threshold > 0 and

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from typing import Generator, List, Optional, Set
 
-from .engine import Environment, Event
+from .engine import Environment, Event, Interrupt
 from .metrics import RunResult
 from .params import Params
 from .pool import PoolManager
@@ -42,6 +42,11 @@ class Scheduler:
         self.job_active = False
         self._stall_event: Optional[Event] = None
         self._stall_server: Optional[Server] = None
+        #: server popped from a pool by an in-flight acquisition (between
+        #: the pop and the post-wait join) — a fault-domain interrupt
+        #: mid-acquisition recovers it via :meth:`take_inflight` instead
+        #: of leaking it
+        self._inflight: Optional[Server] = None
 
     # -- initial allocation (t=0 host selection) ----------------------------
     def initial_allocation(self) -> Generator:
@@ -81,7 +86,9 @@ class Scheduler:
         # 2. working pool: pay a host-selection round.
         server = self.pools.pop_working()
         if server is not None:
+            self._inflight = server
             yield self.env.timeout(p.host_selection_time)
+            self._inflight = None
             m.n_host_selections += 1
             server.state = ServerState.RUNNING
             self.job_members.add(server.sid)
@@ -90,9 +97,11 @@ class Scheduler:
         # 3. spare pool: preempt another job, then host selection.
         server = self.pools.pop_spare()
         if server is not None:
+            self._inflight = server
             yield self.env.timeout(p.waiting_time + p.preemption_cost)
             m.n_preemptions += 1
             yield self.env.timeout(p.host_selection_time)
+            self._inflight = None
             m.n_host_selections += 1
             server.state = ServerState.RUNNING
             self.job_members.add(server.sid)
@@ -105,10 +114,73 @@ class Scheduler:
         # Returned servers rejoin without host selection if they were job
         # members; fresh pool servers pay host selection.
         if server.sid not in self.job_members:
+            self._inflight = server
             yield self.env.timeout(p.host_selection_time)
+            self._inflight = None
             m.n_host_selections += 1
             self.job_members.add(server.sid)
         server.state = ServerState.RUNNING
+        return server
+
+    def take_inflight(self) -> Optional[Server]:
+        """Recover the server an interrupted acquisition had in flight.
+
+        The CTMC race joins replacements to the run set at the failure
+        step itself, so a shock arriving mid-acquisition must not lose
+        the popped server: the coordinator claims it here and counts it
+        as joined.
+        """
+        server, self._inflight = self._inflight, None
+        if server is not None:
+            server.state = ServerState.RUNNING
+            self.job_members.add(server.sid)
+        return server
+
+    # -- fault-domain group restarts (see repro.core.faultdomains) ----------
+    def draw_replacements(self, n: int):
+        """Zero-time bulk waterfall draw for a domain-shock group restart.
+
+        Mirrors the CTMC race, which resolves all replacement *moves* at
+        the shock step and charges the time cost as one group restart:
+        returns ``(servers, n_working, n_spare, shortfall)`` with the
+        per-server counters (standby swaps, host selections, preemptions)
+        already recorded.  The caller charges the restart wait.
+        """
+        m = self.metrics
+        out: List[Server] = []
+        t_sb = t_fw = t_fs = 0
+        for _ in range(n):
+            if self.standbys:
+                server = self.standbys.pop()
+                t_sb += 1
+            else:
+                server = self.pools.pop_working()
+                if server is not None:
+                    t_fw += 1
+                else:
+                    server = self.pools.pop_spare()
+                    if server is not None:
+                        t_fs += 1
+                    else:
+                        break
+            server.state = ServerState.RUNNING
+            self.job_members.add(server.sid)
+            out.append(server)
+        m.n_standby_swaps += t_sb
+        m.n_host_selections += t_fw + t_fs
+        m.n_preemptions += t_fs
+        return out, t_fw, t_fs, n - len(out)
+
+    def group_stall_acquire(self) -> Generator:
+        """One deficit-refill acquisition for a shocked group.
+
+        Matches the CTMC ``to_stalled`` join: a returning server joins
+        the run set directly with no host-selection surcharge (the
+        group pays a single recovery after the deficit clears).
+        """
+        server = yield from self._stall_until_available()
+        server.state = ServerState.RUNNING
+        self.job_members.add(server.sid)
         return server
 
     def _stall_until_available(self) -> Generator:
@@ -130,10 +202,25 @@ class Scheduler:
             yield self._stall_event
             assert self._stall_server is not None
             return self._stall_server
+        except Interrupt:
+            # a fault-domain injection interrupted the stall: a hand-off
+            # may have landed between succeed() and our resumption —
+            # park it in _inflight so the coordinator can claim it
+            if self._stall_server is not None:
+                self._inflight = self._stall_server
+            raise
         finally:
             self.pools.remove_release_watcher(_watcher)
             self._stall_event = None
             self._stall_server = None
+
+    #: when a fault-domain scenario is active, repaired servers backfill
+    #: the job's standby complement first *regardless of membership* —
+    #: after a correlated outage the degraded job is restored before the
+    #: pools are (and the CTMC engine's return lane, which carries no
+    #: membership, has exactly these semantics).  False (default) keeps
+    #: the paper rule: only original job members return to the job.
+    standby_refill_any = False
 
     # -- repaired-server returns --------------------------------------------
     def on_server_return(self, server: Server) -> None:
@@ -143,9 +230,11 @@ class Scheduler:
             self._stall_server = server
             self._stall_event.succeed(server)
             return
-        if (self.job_active and server.sid in self.job_members
+        if (self.job_active
+                and (server.sid in self.job_members or self.standby_refill_any)
                 and len(self.standbys) < self.params.warm_standbys):
             server.state = ServerState.STANDBY
+            self.job_members.add(server.sid)
             self.standbys.append(server)
             return
         # no longer needed by the job

@@ -16,6 +16,7 @@ import numpy as np
 
 from .coordinator import Coordinator
 from .engine import Environment
+from .faultdomains import ShockInjector
 from .metrics import RunResult
 from .params import Params
 from .pool import PoolManager
@@ -43,6 +44,23 @@ class ClusterSimulation:
         self.coordinator = Coordinator(
             self.env, params, self.rng, self.metrics, self.scheduler,
             self.repair_shop, self.sampler)
+        # correlated failure domains / scripted campaigns (faultdomains):
+        # one merged injection stream the coordinator races against
+        # compute.  Zero shock rates and an empty campaign draw nothing
+        # from the RNG, keeping plain runs bit-identical.
+        self.injector = None
+        if params.fault_domains is not None or params.campaign is not None:
+            total = params.working_pool_size + params.spare_pool_size
+            self.injector = ShockInjector(
+                params.fault_domains, params.campaign, total, self.rng)
+            self.coordinator.injector = self.injector
+            # scenario return semantics: repaired servers backfill the
+            # job's standbys regardless of membership (matches the CTMC
+            # return lane, which carries no membership information)
+            self.scheduler.standby_refill_any = True
+            if params.fault_domains is not None:
+                self.metrics.domain_shocks = (
+                    [0] * params.fault_domains.n_domains)
 
     # -- bad-set regeneration (assumption 1, case 2) -------------------------
     def _regeneration_process(self) -> Generator:
@@ -56,7 +74,13 @@ class ClusterSimulation:
     def run(self) -> RunResult:
         if self.params.bad_set_regeneration_period > 0:
             self.env.process(self._regeneration_process(), name="regen")
+        if self.injector is not None:
+            # created before the job so a same-instant tie resolves
+            # injection-first (the CTMC campaign-residual tie-break)
+            self.env.process(self.coordinator.injection_loop(),
+                             name="injector")
         job = self.env.process(self.coordinator.run_job(), name="job")
+        self.coordinator._job_proc = job
         self.env.run_until_process(job)
         self.metrics.total_time = self.env.now
         return self.metrics

@@ -28,7 +28,10 @@ engine.
 
 Special virtual parameter ``systematic_failure_rate_multiplier`` sets the
 systematic rate as a multiple of the (possibly swept) random rate, the way
-Table I expresses it.
+Table I expresses it.  ``rack_shock_rate`` / ``pod_shock_rate`` sweep the
+correlated-failure-domain shock intensities (Params.fault_domains must be
+set); the rates are traced columns on the CTMC fast path, so a whole
+shock-rate grid compiles once.
 """
 
 from __future__ import annotations
@@ -48,7 +51,8 @@ from .params import Params
 DEFAULT_STATS = ("total_time", "n_failures", "n_random_failures",
                  "n_systematic_failures", "n_preemptions", "n_auto_repairs",
                  "n_manual_repairs", "n_host_selections", "stall_time",
-                 "overhead_fraction", "mean_run_duration")
+                 "overhead_fraction", "mean_run_duration",
+                 "n_domain_shocks", "n_incomplete")
 
 
 def _apply_param(params: Params, name: str, value: Any) -> Params:
@@ -56,6 +60,12 @@ def _apply_param(params: Params, name: str, value: Any) -> Params:
     if name == "systematic_failure_rate_multiplier":
         return params.replace(
             systematic_failure_rate=value * params.random_failure_rate)
+    if name in ("rack_shock_rate", "pod_shock_rate"):
+        if params.fault_domains is None:
+            raise ValueError(
+                f"sweeping {name!r} requires Params.fault_domains")
+        return params.replace(fault_domains=dataclasses.replace(
+            params.fault_domains, **{name: value}))
     if not hasattr(params, name):
         raise ValueError(f"unknown parameter {name!r}")
     # preserve int-ness of count-typed fields

@@ -93,6 +93,18 @@ class Tracer:
 
         sched.acquire_replacement = acquire_replacement
 
+        # fault-domain injections (shock | kill | maint_start | maint_end)
+        if getattr(sim, "injector", None) is not None:
+            orig_apply = coord._apply_injection
+
+            def apply_injection(inj):
+                tracer.record(env.now, inj.kind, -1,
+                              f"domain={inj.domain} "
+                              f"members={len(inj.members)}")
+                return orig_apply(inj)
+
+            coord._apply_injection = apply_injection
+
     # -- outputs -------------------------------------------------------------
     def write_csv(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)

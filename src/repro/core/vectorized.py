@@ -98,17 +98,44 @@ surfaces as the ``n_repair_overflow`` metric and a RuntimeWarning.
 Exponential repairs keep the original count-based compartments
 bit-for-bit (memoryless repairs need no per-server state).
 
+Correlated failure domains + campaigns: when ``Params.fault_domains`` /
+``Params.campaign`` are set (see :mod:`repro.core.faultdomains` and
+docs/scenarios.md), the race grows one extra exponential lane per fault
+domain — a shared *shock* clock that is live in every non-DONE phase —
+and the flattened campaign schedule races as one more deterministic
+residual (placed first, so a campaign entry beats a same-instant timer
+on both engines).  A shock or scripted kill removes ``fraction x count``
+servers from every pool at once (stochastically rounded, class-
+proportional), sends them through the auto-repair compartment, and
+bulk-replaces the running block through the standby -> working ->
+spare waterfall; the replacement shortfall accumulates in a ``deficit``
+lane so the job only unstalls when the whole block is restored.
+Maintenance windows gate the exponential repair rates to zero — exact
+pause/resume by memorylessness.  The scenario *structure* (domain count,
+schedule codes) is a static compile switch; every rate, fraction, time,
+and target domain is traced, so a shock-rate grid compiles once.
+Scenarios require exponential repairs on this path (``supports`` routes
+non-exponential-repair scenarios to the event engine); in-shop servers
+struck by a shock re-break, which is exact-in-law a no-op for
+exponential stages and is therefore only counted.
+
 Known approximations vs the event-driven oracle (validated statistically
 in tests/test_vectorized.py, tests/test_nonexp.py, and
 tests/test_repair_dist.py):
   * class-proportional sampling everywhere (exact under exchangeability);
   * misdiagnosis picks the wrong server proportionally over ALL running
     servers (the oracle excludes the failed one: O(1/4096) difference);
-  * the initial bad-server split across pools uses its expectation.
+  * the initial bad-server split across pools uses its expectation;
+  * a domain shock kills stochastically-rounded class-proportional
+    counts per pool rather than a fixed member set (exact in
+    expectation under round-robin striping), and a bulk replacement
+    that partially stalls drops its host-selection surcharge (the
+    stall interval dominates it on both engines).
 
 Out of scope (routed to core.simulation): retirement, bad-set
 regeneration, deterministic/user-registered failure distributions,
-user-registered repair distributions, failing standbys.
+user-registered repair distributions, failing standbys, and fault
+domains / campaigns combined with non-exponential repairs.
 """
 
 from __future__ import annotations
@@ -122,7 +149,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from . import hazards
+from . import faultdomains, hazards
 from .histograms import HIST_CHANNELS
 from .params import Params
 
@@ -134,7 +161,8 @@ _METRICS = ("total_time", "n_failures", "n_random_failures",
             "n_manual_repairs", "n_failed_repairs", "n_host_selections",
             "n_standby_swaps", "n_undiagnosed", "n_misdiagnosed",
             "stall_time", "recovery_overhead", "lost_work", "useful_work",
-            "n_repair_overflow")
+            "n_repair_overflow", "n_domain_shocks", "n_shock_killed",
+            "n_campaign_events")
 
 
 def supports(params: Params) -> bool:
@@ -166,9 +194,25 @@ def supports(params: Params) -> bool:
     False
     >>> supports(Params(retirement_threshold=3))
     False
+
+    Correlated fault domains and injection campaigns
+    (:mod:`repro.core.faultdomains`) stay on the fast path under
+    exponential repairs — a struck in-shop server's stage restart is
+    exact-in-law a no-op there.  Non-exponential repairs would need
+    per-slot redraws, so that combination routes to the event engine:
+
+    >>> from repro.core.faultdomains import FaultTopology
+    >>> topo = FaultTopology(n_racks=8, rack_shock_rate=1e-5)
+    >>> supports(Params(fault_domains=topo))
+    True
+    >>> supports(Params(fault_domains=topo, repair_distribution="weibull"))
+    False
     """
+    scenario_ok = ((params.fault_domains is None and params.campaign is None)
+                   or hazards.repair_kind(params) == "exponential")
     return (hazards.hazard_kind(params) is not None
             and hazards.repair_kind(params) is not None
+            and scenario_ok
             and params.retirement_threshold == 0
             and params.bad_set_regeneration_period == 0
             and params.checkpoint_interval == 0
@@ -227,7 +271,8 @@ def _age_dtype(p: Params):
 
 def _initial_state_batch(pts, R: int, max_runs: int,
                          rkind: str = "exponential",
-                         n_slots: int = 0) -> Dict[str, jnp.ndarray]:
+                         n_slots: int = 0,
+                         scen=None) -> Dict[str, jnp.ndarray]:
     """Padded initial state for a structural grid, point-major (P*R, ...).
 
     All points share one compartment layout, so structural parameters
@@ -239,6 +284,12 @@ def _initial_state_batch(pts, R: int, max_runs: int,
 
     ``rkind`` / ``n_slots`` size the repair-slot lane (non-exponential
     repairs only): ``repair_rem`` +inf marks a free slot.
+
+    ``scen`` is the static scenario key ``(D, codes)`` from
+    :func:`repro.core.faultdomains.scenario_key` — it adds the
+    replacement-deficit lane, the per-domain shock counters, and (when
+    the flattened campaign schedule is non-empty) the schedule pointer
+    and maintenance flag.
     """
     P = len(pts)
     B = P * R
@@ -284,6 +335,17 @@ def _initial_state_batch(pts, R: int, max_runs: int,
         state["hist"] = jnp.zeros((B, len(sel), spec.n_counts),
                                   jnp.float32)
         state["hist_edges"] = jnp.asarray(spec.edges(), jnp.float32)
+    if scen is not None:
+        D_dom, camp_codes = scen
+        # outstanding replacements after bulk kills: the job unstalls
+        # only when the whole struck block has been restored
+        state["deficit"] = jnp.zeros((B,), jnp.float32)
+        if D_dom:
+            state["domain_shocks"] = jnp.zeros((B, D_dom), jnp.float32)
+        if len(camp_codes):
+            state["camp_idx"] = jnp.zeros((B,), jnp.int32)
+        if faultdomains.MAINT_START in camp_codes:
+            state["maint"] = jnp.zeros((B,), jnp.float32)
     for m in _METRICS:
         state[m] = jnp.zeros((B,), jnp.float32)
     return state
@@ -337,7 +399,7 @@ def _initial_state(p: Params, R: int,
     rkind = hazards.repair_kind(p) or "exponential"
     return _initial_state_batch(
         [p], R, _max_runs_for([p]) if max_runs is None else max_runs,
-        rkind, _repair_slots_for([p], rkind))
+        rkind, _repair_slots_for([p], rkind), faultdomains.scenario_key(p))
 
 
 def _max_runs_for(pts) -> int:
@@ -410,17 +472,19 @@ def _n_uniforms(kind: str, rkind: str = "exponential") -> int:
 def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
           impl: Optional[str], kind: str = "exponential",
           rkind: str = "exponential",
-          hist_channels: tuple = HIST_CHANNELS) -> Dict[str, jnp.ndarray]:
+          hist_channels: tuple = HIST_CHANNELS,
+          scen=None) -> Dict[str, jnp.ndarray]:
     R = s["t"].shape[0]
     u = jax.random.uniform(key_t, (R, _n_uniforms(kind, rkind)),
                            dtype=jnp.float32, minval=1e-12, maxval=1.0)
-    return _step_u(s, u, pv, impl, kind, rkind, hist_channels)
+    return _step_u(s, u, pv, impl, kind, rkind, hist_channels, scen)
 
 
 def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
             impl: Optional[str], kind: str = "exponential",
             rkind: str = "exponential",
-            hist_channels: tuple = HIST_CHANNELS) -> Dict[str, jnp.ndarray]:
+            hist_channels: tuple = HIST_CHANNELS,
+            scen=None) -> Dict[str, jnp.ndarray]:
     """One CTMC transition for a batch of replicas.
 
     ``pv`` is either a single parameter vector shared by the whole batch
@@ -433,6 +497,13 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
 
     ``hist_channels`` is the static tuple of histogram channels the scan
     state carries (must match ``s["hist"].shape[1]``).
+
+    ``scen`` is the static scenario key ``(D, codes)`` — when set, 2D +
+    3L trailing scenario columns follow the repair columns (see
+    :func:`repro.core.faultdomains.scenario_columns`) and the race gains
+    D shock lanes plus (for a non-empty schedule) a campaign residual.
+    Scenarios only reach this path with exponential repairs
+    (``supports``), so ``scen`` and the repair-slot lane never co-exist.
     """
     n_cols = 15 + hazards.N_HAZARD_COLS + hazards.N_REPAIR_COLS
     if pv.ndim == 1:
@@ -446,6 +517,25 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
      warm_standbys) = cols[:15]
     hz = cols[15:15 + hazards.N_HAZARD_COLS]
     rz = cols[15 + hazards.N_HAZARD_COLS:]
+
+    if scen is not None:
+        # scenario columns: [rates (D), fractions (D), times (L),
+        # kill fracs (L), target domains (L)] — all traced; only the
+        # counts D / L and the schedule codes are static
+        D_dom, camp_codes = scen
+        Lc = len(camp_codes)
+        has_maint = faultdomains.MAINT_START in camp_codes
+
+        def _scol(lo, n):
+            if not n:
+                return None
+            return pv[lo:lo + n] if pv.ndim == 1 else pv[:, lo:lo + n]
+
+        shock_rate = _scol(n_cols, D_dom)
+        dom_frac = _scol(n_cols + D_dom, D_dom)
+        camp_t = _scol(n_cols + 2 * D_dom, Lc)
+        camp_frac = _scol(n_cols + 2 * D_dom + Lc, Lc)
+        camp_dom = _scol(n_cols + 2 * D_dom + 2 * Lc, Lc)
 
     u_time, u_pick, u_diag, u_wrong, u_cls, u_esc, u_succ, u_pool = (
         u[:, 0], u[:, 1], u[:, 2], u[:, 3], u[:, 4], u[:, 5], u[:, 6],
@@ -535,8 +625,28 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         # no rate (the auto/man compartment counts remain bookkeeping)
         auto_rate = jnp.zeros_like(run)
         man_rate = jnp.zeros_like(run)
-    rates = jnp.concatenate([fail_rand, fail_sys, auto_rate, man_rate],
-                            axis=-1) * active[:, None]
+    rate_parts = [fail_rand, fail_sys, auto_rate, man_rate]
+    kx = K_EXP
+    if scen is not None:
+        if has_maint:
+            # maintenance window: the repair shop is dark — gating the
+            # exponential repair rates to zero is an exact pause/resume
+            # (memorylessness); jnp.where keeps any inf in the rate
+            # math from turning into 0*inf = NaN
+            repair_on = (s["maint"] == 0.0)[:, None]
+            auto_rate = jnp.where(repair_on, auto_rate, 0.0)
+            man_rate = jnp.where(repair_on, man_rate, 0.0)
+            rate_parts = [fail_rand, fail_sys, auto_rate, man_rate]
+        if D_dom:
+            # shared-shock lanes: one exponential clock per fault
+            # domain, live in every non-DONE phase (a rack PDU does not
+            # care whether the job is computing) — only the trailing
+            # * active masks them
+            sr = shock_rate if pv.ndim == 2 else jnp.broadcast_to(
+                shock_rate, (run.shape[0], D_dom))
+            rate_parts.append(sr)
+            kx = K_EXP + D_dom
+    rates = jnp.concatenate(rate_parts, axis=-1) * active[:, None]
 
     # residual column order matters for exact ties (argmin takes the
     # first): the repair-slot residual comes FIRST so a repair completing
@@ -545,6 +655,21 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     # the final phase's completion timeout, so it pops first at equal
     # timestamps).  The job then completes in the next step at dt=0.
     resid_cols = []
+    coff = 0
+    if scen is not None and Lc:
+        # campaign schedule residual: time to the next scheduled entry.
+        # Placed before every other residual so a scripted kill at the
+        # exact instant of a timer/completion resolves campaign-first —
+        # the event engine's ShockInjector breaks the same tie the same
+        # way.  Entries fire one per step (same-time entries burn
+        # successive dt=0 steps in schedule order).
+        brows0 = jnp.arange(run.shape[0])
+        ci = jnp.clip(s["camp_idx"], 0, Lc - 1)
+        ct = camp_t[ci] if camp_t.ndim == 1 else camp_t[brows0, ci]
+        camp_pending = active & (s["camp_idx"] < Lc)
+        resid_cols.append(jnp.where(
+            camp_pending, jnp.maximum(ct - s["t"], 0.0), jnp.inf))
+        coff = 1
     roff = 0
     if rkind != "exponential":
         rep_rem = s["repair_rem"]
@@ -566,21 +691,21 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     is_fail = active & (ev < 8)
     is_sys = active & (ev >= 4) & (ev < 8)
     if kind == "weibull":
-        # the failure arrives on the hazard residual (K_EXP + roff + 2);
-        # pick the failing channel from the hazard shares.  u_pick is
-        # only consumed by the race when an *exponential* channel wins,
-        # so it is fresh (and independent of dt) here.
+        # the failure arrives on the hazard residual (kx + coff + roff
+        # + 2); pick the failing channel from the hazard shares.  u_pick
+        # is only consumed by the race when an *exponential* channel
+        # wins, so it is fresh (and independent of dt) here.
         total_w = jnp.maximum(haz_weights.sum(-1), 1e-30)
         cdf8 = jnp.cumsum(haz_weights, axis=-1) / total_w[:, None]
         pick8 = jnp.minimum(
             jnp.sum((u_pick[:, None] >= cdf8).astype(jnp.int32), -1), 7)
-        haz_fail = active & (ev == K_EXP + roff + 2)
+        haz_fail = active & (ev == kx + coff + roff + 2)
         is_fail = haz_fail
         is_sys = haz_fail & (pick8 >= 4)
         cls = jnp.where(haz_fail, pick8 % 4, cls).astype(jnp.int32)
     elif kind == "bathtub":
         # accept/reject: a rejected candidate (and the window-expiry
-        # event ev == K_EXP + roff + 2) is a phantom — time and work
+        # event ev == kx + coff + roff + 2) is a phantom — time and work
         # advance, no state transition fires.
         g_at = hazards.FAILURE_SAMPLERS["bathtub"].hazard(
             age32 + dt, (hz[0], hz[1], hz[2], hz[3]))
@@ -607,14 +732,128 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         # channels feed (channels 8..16 are rateless here)
         rows = jnp.arange(rep_rem.shape[0])
         won_slot = jnp.argmin(rep_rem, axis=-1)
-        is_rep = active & (ev == K_EXP)
+        is_rep = active & (ev == kx + coff)
         done_stage = s["repair_stage"][rows, won_slot]
         cls = jnp.where(is_rep, s["repair_cls"][rows, won_slot],
                         cls).astype(jnp.int32)
         is_auto = is_rep & (done_stage == 0)
         is_man = is_rep & (done_stage == 1)
-    is_complete = active & (ev == K_EXP + roff)
-    is_timer = active & (ev == K_EXP + roff + 1)
+    is_complete = active & (ev == kx + coff + roff)
+    is_timer = active & (ev == kx + coff + roff + 1)
+
+    if scen is not None:
+        # ---- correlated shock / campaign event sizing -------------------
+        # Shock events arrive on lanes [K_EXP, kx); campaign entries on
+        # the first residual (ev == kx).  A shock or scripted kill is
+        # mutually exclusive with every other event this step, so the
+        # idle failure-path uniforms (u_diag/u_wrong/u_cls/u_esc/u_succ)
+        # are free to stochastically round the per-pool kill counts
+        # without widening the per-step stream — which is what keeps the
+        # rate->0 / empty-campaign programs bit-identical to the
+        # scenario-free ones.
+        brows = jnp.arange(run.shape[0])
+        false_b = jnp.zeros_like(active)
+        if D_dom:
+            is_shock = active & (ev >= K_EXP) & (ev < kx)
+            shock_dom = jnp.clip(ev - K_EXP, 0, D_dom - 1)
+        else:
+            is_shock = false_b
+            shock_dom = jnp.zeros_like(ev)
+        if Lc:
+            is_camp = camp_pending & (ev == kx)
+            code_arr = jnp.asarray(camp_codes, jnp.int32)
+            cur_code = code_arr[ci]
+            is_kill = is_camp & (cur_code == faultdomains.KILL)
+            is_m_on = is_camp & (cur_code == faultdomains.MAINT_START)
+            is_m_off = is_camp & (cur_code == faultdomains.MAINT_END)
+            kdom = (camp_dom[ci] if camp_dom.ndim == 1
+                    else camp_dom[brows, ci]).astype(jnp.int32)
+            kfrac = (camp_frac[ci] if camp_frac.ndim == 1
+                     else camp_frac[brows, ci])
+        else:
+            is_camp = is_kill = is_m_on = is_m_off = false_b
+            kdom = jnp.zeros_like(ev)
+            kfrac = jnp.zeros_like(u_time)
+        struck = is_shock | is_kill
+        dom = jnp.where(is_shock, shock_dom, kdom)
+        if D_dom:
+            dfrac = (dom_frac[dom] if dom_frac.ndim == 1
+                     else dom_frac[brows, dom])
+        else:
+            dfrac = jnp.zeros_like(u_time)
+        frac = jnp.where(is_kill, kfrac, dfrac)
+
+        def _syscomp(cnt, tgt, uu):
+            # systematic (stratified) rounding of a fractional per-class
+            # target composition ``tgt`` (B, 4): returns integer
+            # per-class counts n_c in {floor(tgt_c), ceil(tgt_c)} that
+            # sum to the stochastic rounding of tgt.sum() — one uniform
+            # drives both the total and its split.  With integer
+            # occupancies and tgt_c <= cnt_c, n_c <= cnt_c always, so
+            # compartments keep the whole-server invariant the repair
+            # race's one-hot removals rely on.
+            C = jnp.cumsum(tgt, axis=-1)
+            Cm = jnp.concatenate([jnp.zeros_like(C[:, :1]), C[:, :-1]],
+                                 axis=-1)
+            up = jnp.maximum(jnp.ceil(C - uu[:, None]), 0.0)
+            lo = jnp.maximum(jnp.ceil(Cm - uu[:, None]), 0.0)
+            return up - lo
+
+        def _sround(x, uu):
+            fl = jnp.floor(x)
+            return fl + (uu < x - fl).astype(jnp.float32)
+
+        fr = frac[:, None]
+        rm_run = _syscomp(run, run * fr, u_diag) * struck[:, None]
+        rm_sb = _syscomp(s["sb"], s["sb"] * fr, u_wrong) * struck[:, None]
+        rm_fw = _syscomp(s["fw"], s["fw"] * fr, u_cls) * struck[:, None]
+        rm_fs = _syscomp(s["fs"], s["fs"] * fr, u_esc) * struck[:, None]
+        k_run = rm_run.sum(-1)
+        k_sb = rm_sb.sum(-1)
+        k_fw = rm_fw.sum(-1)
+        k_fs = rm_fs.sum(-1)
+        # in-shop members re-break: exact-in-law a no-op under the
+        # exponential stages this path guarantees — counted, not moved
+        shop_tot0 = jnp.maximum(s["auto"].sum(-1) + s["man"].sum(-1), 0.0)
+        k_shop = jnp.where(struck,
+                           _sround(shop_tot0 * frac, u_succ), 0.0)
+        # bulk replacement through the same standby -> working -> spare
+        # waterfall a single failure uses, sized against the post-kill
+        # pool occupancies (all integers, so the min-chain is exact)
+        sb_rem = jnp.maximum(s["sb"].sum(-1) - k_sb, 0.0)
+        fw_rem = jnp.maximum(s["fw"].sum(-1) - k_fw, 0.0)
+        fs_rem = jnp.maximum(s["fs"].sum(-1) - k_fs, 0.0)
+        t_sb = jnp.minimum(k_run, sb_rem)
+        t_fw = jnp.minimum(k_run - t_sb, fw_rem)
+        t_fs = jnp.minimum(k_run - t_sb - t_fw, fs_rem)
+        shortfall = jnp.maximum(k_run - t_sb - t_fw - t_fs, 0.0)
+
+        def _take(cnt, t, tot, uu):
+            ratio = (t / jnp.maximum(tot, 1.0))[:, None]
+            return _syscomp(cnt, cnt * ratio, uu)
+
+        # the take compositions reuse u_pool (idle on shock steps) with
+        # golden-ratio decorrelation shifts — correlated rounding across
+        # pools is harmless (totals are exact; only the class split of a
+        # single bulk event is approximated)
+        PHI = 0.6180339887498949
+        mv_sb = _take(s["sb"] - rm_sb, t_sb, sb_rem, u_pool)
+        mv_fw = _take(s["fw"] - rm_fw, t_fw, fw_rem,
+                      jnp.mod(u_pool + PHI, 1.0))
+        mv_fs = _take(s["fs"] - rm_fs, t_fs, fs_rem,
+                      jnp.mod(u_pool + 2.0 * PHI, 1.0))
+        sh_affects = struck & (k_run > 0)
+        # full replacements while already stalled must not clobber the
+        # STALL — the original deficit is still outstanding
+        sh_resolves = sh_affects & (shortfall <= 1e-6) & ~stalled
+        sh_stalls = sh_affects & ~sh_resolves
+        # one concurrent group restart: host selection / preemption
+        # waits overlap across the block, so the overhead is charged
+        # once per event, not per server
+        shock_timer = (recovery
+                       + jnp.where(t_fw + t_fs > 1e-6, host_sel, 0.0)
+                       + jnp.where(t_fs > 1e-6, waiting + preempt_cost,
+                                   0.0))
 
     ns = dict(s)
     ns["t"] = s["t"] + dt
@@ -650,6 +889,10 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     # downstream as the run_duration_truncated stat, and per-replica
     # means stay exact via sum(records) = useful + lost - cur_run.
     record = is_fail | is_complete
+    if scen is not None:
+        # a shock gutting the running set ends the in-flight compute
+        # interval exactly like a failure would
+        record = record | (sh_affects & computing)
     run_val = s["cur_run"] + progress
     max_runs = s["run_durations"].shape[1]
     if max_runs:    # static shape: max_runs=0 compiles the buffer out
@@ -752,12 +995,72 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     ns["sb"] = ns["sb"] + out1h * to_sb[:, None]
     ns["fw"] = ns["fw"] + out1h * (to_pool & ~spare_origin)[:, None]
     ns["fs"] = ns["fs"] + out1h * (to_pool & spare_origin)[:, None]
-    ns["phase"] = jnp.where(to_stalled, OVERHEAD, ns["phase"])
-    ns["timer"] = jnp.where(to_stalled, recovery, ns["timer"])
+    if scen is None:
+        unstall = to_stalled
+    else:
+        # outstanding-replacement deficit: a bulk kill can leave the
+        # stalled job short several servers; each returning repair
+        # retires one unit and the job only restarts once the whole
+        # block is restored (struck / goes_stall / finishes are
+        # mutually exclusive per step, so the chain is race-free)
+        deficit = (s["deficit"]
+                   + jnp.where(goes_stall, 1.0, 0.0)
+                   + jnp.where(struck, shortfall, 0.0))
+        deficit = jnp.where(to_stalled,
+                            jnp.maximum(deficit - 1.0, 0.0), deficit)
+        unstall = to_stalled & (deficit <= 1e-6)
+        ns["deficit"] = deficit
+    ns["phase"] = jnp.where(unstall, OVERHEAD, ns["phase"])
+    ns["timer"] = jnp.where(unstall, recovery, ns["timer"])
     ns["stall_time"] = s["stall_time"] \
-        + jnp.where(to_stalled, ns["t"] - s["stall_start"], 0.0)
+        + jnp.where(unstall, ns["t"] - s["stall_start"], 0.0)
     ns["recovery_overhead"] = ns["recovery_overhead"] \
-        + jnp.where(to_stalled, recovery, 0.0)
+        + jnp.where(unstall, recovery, 0.0)
+
+    if scen is not None:
+        # ---- correlated shock / campaign execution ----------------------
+        # the struck block leaves every compartment at once and enters
+        # the automated-repair stage; replacements drawn above through
+        # the standard waterfall join the run set in the same step.
+        # In-shop casualties (k_shop) re-break in place: under the
+        # exponential stages this path guarantees, a restarted repair is
+        # distributed exactly like the remaining one (memorylessness),
+        # so they are counted but not moved.
+        w = struck[:, None]
+        ns["run"] = jnp.where(
+            w, ns["run"] - rm_run + mv_sb + mv_fw + mv_fs, ns["run"])
+        ns["sb"] = jnp.where(w, ns["sb"] - rm_sb - mv_sb, ns["sb"])
+        ns["fw"] = jnp.where(w, ns["fw"] - rm_fw - mv_fw, ns["fw"])
+        ns["fs"] = jnp.where(w, ns["fs"] - rm_fs - mv_fs, ns["fs"])
+        ns["auto"] = jnp.where(
+            w, ns["auto"] + rm_run + rm_sb + rm_fw + rm_fs, ns["auto"])
+        ns["n_domain_shocks"] = s["n_domain_shocks"] \
+            + is_shock.astype(jnp.float32)
+        ns["n_campaign_events"] = s["n_campaign_events"] \
+            + is_camp.astype(jnp.float32)
+        ns["n_shock_killed"] = s["n_shock_killed"] \
+            + jnp.where(struck, k_run + k_sb + k_fw + k_fs + k_shop, 0.0)
+        ns["n_standby_swaps"] = ns["n_standby_swaps"] \
+            + jnp.where(struck, t_sb, 0.0)
+        ns["n_host_selections"] = ns["n_host_selections"] \
+            + jnp.where(struck, t_fw + t_fs, 0.0)
+        ns["n_preemptions"] = ns["n_preemptions"] \
+            + jnp.where(struck, t_fs, 0.0)
+        if D_dom:
+            ns["domain_shocks"] = s["domain_shocks"].at[brows, dom].add(
+                is_shock.astype(jnp.float32))
+        if Lc:
+            ns["camp_idx"] = s["camp_idx"] + is_camp.astype(jnp.int32)
+        if has_maint:
+            ns["maint"] = jnp.where(
+                is_m_on, 1.0, jnp.where(is_m_off, 0.0, s["maint"]))
+        ns["timer"] = jnp.where(sh_resolves, shock_timer, ns["timer"])
+        ns["phase"] = jnp.where(sh_resolves, OVERHEAD, ns["phase"])
+        ns["phase"] = jnp.where(sh_stalls, STALL, ns["phase"])
+        ns["stall_start"] = jnp.where(sh_stalls & ~stalled, ns["t"],
+                                      ns["stall_start"])
+        ns["recovery_overhead"] = ns["recovery_overhead"] \
+            + jnp.where(sh_resolves, recovery, 0.0)
 
     # ---- repair-slot lane (non-exponential repairs) ----------------------
     # repairs run on wall-clock time: every occupied slot counts down by
@@ -816,9 +1119,16 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     # failure-to-restart timing.
     if "hist" in s:
         stall_wait = ns["t"] - s["stall_start"]
-        ended = resolves | to_stalled
+        ended = resolves | unstall
         downtime = jnp.where(resolves, fail_timer, stall_wait + recovery)
         acquire_wait = jnp.where(resolves, fail_timer - recovery, stall_wait)
+        if scen is not None:
+            # a shock resolved through the waterfall records its planned
+            # downtime at the resolve instant, like a plain failure
+            ended = ended | sh_resolves
+            downtime = jnp.where(sh_resolves, shock_timer, downtime)
+            acquire_wait = jnp.where(sh_resolves, shock_timer - recovery,
+                                     acquire_wait)
         # one fused searchsorted + scatter-add across the selected
         # channels (static ``hist_channels``, HIST_CHANNELS order) —
         # per-channel scatters multiply the per-step accumulator cost,
@@ -851,8 +1161,12 @@ def _params_vector(p: Params) -> jnp.ndarray:
         p.diagnosis_probability, p.diagnosis_uncertainty,
         p.checkpoint_interval, p.preemption_cost, float(p.warm_standbys),
     ], np.float32)
-    return jnp.asarray(np.concatenate([base, hazards.hazard_columns(p),
-                                       hazards.repair_columns(p)]))
+    parts = [base, hazards.hazard_columns(p), hazards.repair_columns(p)]
+    if faultdomains.scenario_key(p) is not None:
+        # trailing scenario columns (2D + 3L) — traced, so a shock-rate
+        # or campaign-time grid shares one compiled program
+        parts.append(faultdomains.scenario_columns(p).astype(np.float32))
+    return jnp.asarray(np.concatenate(parts))
 
 
 def default_max_steps(p: Params, safety: float = 2.0) -> int:
@@ -867,7 +1181,13 @@ def default_max_steps(p: Params, safety: float = 2.0) -> int:
     """
     lam = hazards.effective_event_rate(p)
     horizon = p.job_length * (1.0 + lam * (p.recovery_time + 2.0))
-    steps = max(128, int(lam * horizon * 3.2 * safety))
+    extra = 0.0
+    if p.fault_domains is not None or p.campaign is not None:
+        # shocks + campaign entries + their bulk repair traffic, and the
+        # horizon stretch of maintenance windows / shock recoveries
+        extra, extra_h = faultdomains.scenario_budget(p, horizon)
+        horizon += extra_h
+    steps = max(128, int((lam * horizon + extra) * 3.2 * safety))
     return steps + int(hazards.phantom_steps(p) * safety)
 
 
@@ -894,11 +1214,11 @@ def _struct_key(p: Params):
 
 @partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "impl",
                                    "early_exit", "struct_key", "kind",
-                                   "rkind", "hist_channels"))
+                                   "rkind", "hist_channels", "scen"))
 def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
                  chunk: int, n_chunks, rem: int, impl: Optional[str],
                  early_exit: bool, struct_key, kind: str, rkind: str,
-                 hist_channels: tuple,
+                 hist_channels: tuple, scen,
                  init_state: Dict[str, jnp.ndarray]):
     """Chunked scan with early exit; batch axis is B = P * R (point-major).
 
@@ -918,7 +1238,8 @@ def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
     def scan_body(state, u):
         if P > 1:
             u = jnp.tile(u, (P, 1))
-        return _step_u(state, u, pv, impl, kind, rkind, hist_channels), None
+        return _step_u(state, u, pv, impl, kind, rkind, hist_channels,
+                       scen), None
 
     def run_chunk(state, i, n_steps):
         # one batched threefry call per chunk (a per-step split + draw is
@@ -983,12 +1304,15 @@ def _unsupported_error() -> ValueError:
         "failure processes with exponential/weibull/lognormal/"
         "deterministic repairs (no retirement / regeneration / "
         "checkpoint rollback / failing standbys / user-registered "
-        "distribution families); use core.simulation.simulate instead")
+        "distribution families; fault domains / campaigns require "
+        "exponential repairs here); use core.simulation.simulate instead")
 
 
 #: non-_METRICS outputs worth returning: completion flag + the exact
 #: run-duration records (ring buffer, attempt count, in-flight interval)
-_EXTRA_OUTPUTS = ("completed", "run_durations", "n_runs", "cur_run")
+#: + the per-domain shock counts of scenario runs (absent otherwise)
+_EXTRA_OUTPUTS = ("completed", "run_durations", "n_runs", "cur_run",
+                  "domain_shocks")
 
 
 def _extract(state, sl=slice(None), channels=()) -> Dict[str, np.ndarray]:
@@ -1043,7 +1367,8 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
                        1, n_replicas, chunk, jnp.int32(max_steps // chunk),
                        max_steps % chunk, impl, early_exit,
                        _struct_key(params), hazards.hazard_kind(params),
-                       hazards.repair_kind(params), channels, init_state)
+                       hazards.repair_kind(params), channels,
+                       faultdomains.scenario_key(params), init_state)
     return _extract(out, channels=channels)
 
 
@@ -1126,7 +1451,12 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         # compiles exactly once.
         kind = hazards.hazard_kind(p)
         rkind = hazards.repair_kind(p)
-        gkey = (kind, rkind, p.age_dtype,
+        # the scenario key (domain count + campaign codes) sizes the race
+        # and the trailing parameter columns, so it splits groups the
+        # same way the hazard family does; shock *rates* and campaign
+        # *times/fractions* stay traced — a shock-rate grid over one
+        # topology compiles exactly once
+        gkey = (kind, rkind, p.age_dtype, faultdomains.scenario_key(p),
                 None if padded else _struct_key(p))
         groups.setdefault(gkey, []).append(i)
     mr = _max_runs_for(params_list) if max_runs is None else max_runs
@@ -1134,7 +1464,7 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
     bucket = padded and bucketed
     channels = _hist_channels(params_list)
     results: list = [None] * len(params_list)
-    for (kind, rkind, _adt, skey), idxs in groups.items():
+    for (kind, rkind, _adt, scen, skey), idxs in groups.items():
         pts = [params_list[i] for i in idxs]
         P, R = len(pts), n_replicas
         steps = max_steps or max(default_max_steps(p) for p in pts)
@@ -1156,13 +1486,14 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
             pv = jnp.pad(pv, ((0, P_run - P), (0, 0)), mode="edge")
         pv_flat = jnp.repeat(pv, R_run, axis=0)       # (P_run*R_run, n_cols)
         init_state = _initial_state_batch(pts, R, mr, rkind,
-                                          _repair_slots_for(pts, rkind))
+                                          _repair_slots_for(pts, rkind),
+                                          scen)
         if (P_run, R_run) != (P, R):
             init_state = _bucket_pad_state(init_state, P, R, P_run, R_run)
         out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P_run, R_run,
                            chunk, jnp.int32(steps // chunk), steps % chunk,
                            impl, early_exit, skey, kind, rkind, channels,
-                           init_state)
+                           scen, init_state)
         for j, i in enumerate(idxs):
             rows = (slice(j * R_run, j * R_run + R) if R_run == R
                     else np.arange(R) + j * R_run)

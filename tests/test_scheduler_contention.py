@@ -1,0 +1,205 @@
+"""Dedicated scheduler + multi-job tests: spare-pool contention and the
+priority order of preemptive replacement.
+
+The single-job Scheduler waterfall (paper §II-B) is exercised here as
+isolated unit tests with hand-driven environments — standby priority,
+working-pool cost, spare-pool *preemption* cost, and the stall path with
+its member/non-member host-selection asymmetry — and the multi-job
+dispatcher's longest-stalled-first (FIFO) hand-off is pinned
+deterministically rather than only statistically.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MINUTES_PER_DAY as DAY
+from repro.core import Params
+from repro.core.engine import Environment
+from repro.core.metrics import RunResult
+from repro.core.multijob import (Dispatcher, JobSpec, MultiJobSimulation,
+                                 simulate_multijob)
+from repro.core.pool import PoolManager
+from repro.core.scheduler import Scheduler
+from repro.core.server import Fleet, ServerState
+
+
+def make_sched(**kw):
+    base = dict(job_size=4, working_pool_size=8, spare_pool_size=3,
+                warm_standbys=1, job_length=100.0, host_selection_time=3.0,
+                waiting_time=20.0, preemption_cost=5.0, recovery_time=1.0,
+                histogram=None)
+    base.update(kw)
+    p = Params(**base)
+    env = Environment()
+    fleet = Fleet(p, np.random.default_rng(0))
+    pools = PoolManager(p, fleet)
+    metrics = RunResult()
+    return env, p, pools, metrics, Scheduler(env, p, pools, metrics)
+
+
+def drive(env, gen):
+    """Run one scheduler generator to completion, return its value."""
+    proc = env.process(gen, name="drv")
+    env.run_until_process(proc)
+    return proc.value
+
+
+# ---------------------------------------------------------------------------
+# replacement priority order (the §II-B waterfall)
+# ---------------------------------------------------------------------------
+
+def test_standby_beats_working_beats_spare():
+    env, p, pools, m, sched = make_sched()
+    drive(env, sched.initial_allocation())
+    t0 = env.now
+
+    # 1. standby: immediate, no host selection, no preemption
+    s = drive(env, sched.acquire_replacement())
+    assert env.now == t0 and s.state is ServerState.RUNNING
+    assert (m.n_standby_swaps, m.n_host_selections, m.n_preemptions) \
+        == (1, 0, 0)
+
+    # 2. standbys empty -> working pool at host-selection cost
+    s = drive(env, sched.acquire_replacement())
+    assert env.now == t0 + p.host_selection_time
+    assert s.sid in sched.job_members
+    assert (m.n_standby_swaps, m.n_host_selections, m.n_preemptions) \
+        == (1, 1, 0)
+
+    # 3. drain the working pool -> spare preemption pays waiting +
+    #    preemption + host selection and bumps n_preemptions
+    while pools.pop_working() is not None:
+        pass
+    t1 = env.now
+    s = drive(env, sched.acquire_replacement())
+    assert env.now == pytest.approx(
+        t1 + p.waiting_time + p.preemption_cost + p.host_selection_time)
+    assert (m.n_standby_swaps, m.n_host_selections, m.n_preemptions) \
+        == (1, 2, 1)
+    assert pools.n_spare_free == p.spare_pool_size - 1
+
+
+def test_stall_member_rejoins_without_host_selection():
+    env, p, pools, m, sched = make_sched(spare_pool_size=0)
+    running = drive(env, sched.initial_allocation())
+    while pools.pop_working() is not None:
+        pass
+    sched.standbys.clear()
+
+    member = running[0]
+
+    def stall_then_return():
+        acq = env.process(sched.acquire_replacement(), name="acq")
+        yield env.timeout(7.0)                   # starving for 7 min
+        sched.on_server_return(member)           # repair completes
+        yield acq
+        return acq.value
+
+    t0 = env.now
+    hs_before = m.n_host_selections
+    got = drive(env, stall_then_return())
+    assert got is member
+    # members skip host selection on return; only stall time is charged
+    assert env.now == pytest.approx(t0 + 7.0)
+    assert m.n_host_selections == hs_before
+    assert m.stall_time == pytest.approx(7.0)
+
+
+def test_stall_nonmember_pays_host_selection():
+    env, p, pools, m, sched = make_sched(spare_pool_size=0)
+    drive(env, sched.initial_allocation())
+    while pools.pop_working() is not None:
+        pass
+    sched.standbys.clear()
+    stranger = pools.fleet.servers[p.working_pool_size - 1]
+    sched.job_members.discard(stranger.sid)
+
+    def stall_then_return():
+        acq = env.process(sched.acquire_replacement(), name="acq")
+        yield env.timeout(2.0)
+        sched.on_server_return(stranger)
+        yield acq
+        return acq.value
+
+    t0 = env.now
+    got = drive(env, stall_then_return())
+    assert got is stranger
+    assert env.now == pytest.approx(t0 + 2.0 + p.host_selection_time)
+    assert stranger.sid in sched.job_members
+
+
+def test_bulk_draw_waterfall_and_shortfall():
+    """draw_replacements drains standbys, then working, then spares, and
+    reports the shortfall when everything is dry."""
+    env, p, pools, m, sched = make_sched(warm_standbys=2)
+    drive(env, sched.initial_allocation())
+    free_w = pools.n_working_free
+    want = 2 + free_w + p.spare_pool_size + 2   # 2 more than exist
+    out, t_fw, t_fs, shortfall = sched.draw_replacements(want)
+    assert len(out) == want - 2 and shortfall == 2
+    assert (m.n_standby_swaps, t_fw, t_fs) == (2, free_w, p.spare_pool_size)
+    assert m.n_host_selections == free_w + p.spare_pool_size
+    assert m.n_preemptions == p.spare_pool_size
+    assert pools.n_working_free == 0 and pools.n_spare_free == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-job: spare-pool contention + FIFO hand-off priority
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_hands_to_longest_stalled_job():
+    env, p, pools, m, sched_a = make_sched()
+    sched_b = Scheduler(env, p, pools, RunResult())
+    for s, since in ((sched_a, 10.0), (sched_b, 4.0)):
+        s._stall_event = env.event()
+        s._stall_server = None
+        s._stall_since = since
+    disp = Dispatcher(pools)
+    disp.register(sched_a)
+    disp.register(sched_b)
+    server = pools.fleet.servers[0]
+    disp.on_server_return(server)
+    # job B stalled at t=4 < job A at t=10: B has waited longest
+    assert sched_b._stall_event.triggered
+    assert sched_b._stall_server is server
+    assert not sched_a._stall_event.triggered
+    assert disp.stall_handoffs == 1
+
+
+def test_spare_pool_contention_between_jobs():
+    """Two jobs share one tight spare pool: both record preemptions, and
+    the spare pool is observably the contended resource."""
+    jobs = [JobSpec(job_size=20, job_length=0.5 * DAY, warm_standbys=0),
+            JobSpec(job_size=20, job_length=0.5 * DAY, warm_standbys=0)]
+    tight = Params(job_size=20, working_pool_size=40, spare_pool_size=4,
+                   warm_standbys=0, job_length=0.5 * DAY,
+                   random_failure_rate=6.0 / DAY,
+                   systematic_failure_rate=0.0,
+                   diagnosis_probability=1.0, auto_repair_time=6 * 60.0,
+                   seed=3)
+    reps = simulate_multijob(tight, jobs, n_replications=4)
+    pre = [sum(r.n_preemptions for r in rep.per_job) for rep in reps]
+    assert sum(pre) > 0, "no spare-pool preemptions despite zero headroom"
+    # with zero working-pool headroom every replacement is a spare draw
+    # or a stall; host selections must match spare preemptions
+    for rep in reps:
+        for r in rep.per_job:
+            assert r.n_standby_swaps == 0
+            assert r.n_host_selections >= r.n_preemptions
+
+
+def test_multijob_conserves_servers():
+    jobs = [JobSpec(job_size=12, job_length=0.25 * DAY, warm_standbys=1),
+            JobSpec(job_size=12, job_length=0.25 * DAY, warm_standbys=1)]
+    p = Params(job_size=12, working_pool_size=32, spare_pool_size=4,
+               warm_standbys=1, job_length=0.25 * DAY,
+               random_failure_rate=3.0 / DAY, seed=7)
+    sim = MultiJobSimulation(p, jobs)
+    result = sim.run()
+    assert all(not r.timed_out for r in result.per_job)
+    total = p.working_pool_size + p.spare_pool_size
+    # every server is accounted for: back in a pool, retired, or still
+    # in the shared repair shop — none leaked into a finished job
+    in_shop = len(sim.repair_shop.in_repair)
+    assert (sim.pools.n_working_free + sim.pools.n_spare_free
+            + sim.pools.n_retired + in_shop == total)
