@@ -40,6 +40,7 @@ FULL_SPEEDUP_FLOORS = {
     "nonexp.speedup_x": 5.0,     # weibull failure grid
     "repair_dist.speedup_x": 5.0,   # repair-policy grid (acceptance)
     "correlated.speedup_x": 5.0,    # fault-domain scenario grid (acceptance)
+    "multijob.speedup_x": 4.0,      # shared-pool capacity grid (acceptance)
 }
 
 #: exact compile-count invariants of the full artifact
@@ -48,6 +49,8 @@ FULL_COMPILE_GATES = {
     "bucketing.bucketed_compiles": 1,
     # the scenario's rates/times are traced: one program per shock grid
     "correlated.sweep_compiles": 1,
+    # J is the only static key: one program per mixed-size capacity grid
+    "multijob.sweep_compiles": 1,
 }
 
 _FAILURES = []
@@ -152,6 +155,39 @@ def run_quick(baseline: dict, tolerance: float) -> None:
           f"{'MISSING' if b_cor is None else f'{b_cor:.2f}x'} (8x256); "
           f"floor {tolerance:.2f}x of committed")
 
+    # the multi-job shared-pool scenario (shared factory, half job
+    # length): a capacity grid through the compartment engine vs the
+    # event-loop MultiJobSimulation — catches the multi-job path
+    # silently recompiling per point or collapsing to the event oracle
+    from benchmarks.engine_perf import multijob_bench_params
+
+    q_mj = _quick_multijob_ab(*multijob_bench_params(job_length_scale=0.5),
+                              n_replicas=64)
+    b_mj = _lookup(baseline, "multijob.speedup_x")
+    _gate("quick.multijob_speedup",
+          b_mj is not None and q_mj >= tolerance * b_mj,
+          f"measured {q_mj:.2f}x warm (4x64 grid) vs committed "
+          f"{'MISSING' if b_mj is None else f'{b_mj:.2f}x'} (8x256); "
+          f"floor {tolerance:.2f}x of committed")
+
+
+def _quick_multijob_ab(cluster, jobs, n_replicas):
+    """Warm multi-job CTMC wall vs the event oracle on a 4-point grid."""
+    from benchmarks.engine_perf import multijob_capacity_grid
+    from repro.core import run_multijob_batch
+
+    grid = multijob_capacity_grid(
+        cluster.replace(max_run_records=64),   # quick-unique jit shapes
+        jobs, spares=(7, 9), shops=(3, 4))
+    run_multijob_batch(grid, n_replicas, engine="ctmc", base_seed=0)
+    t0 = time.perf_counter()
+    run_multijob_batch(grid, n_replicas, engine="ctmc", base_seed=0)
+    ctmc_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_multijob_batch(grid, n_replicas, engine="event", base_seed=0)
+    event_s = time.perf_counter() - t0
+    return event_s / max(ctmc_s, 1e-9)
+
 
 # ---------------------------------------------------------------------------
 # full mode
@@ -175,7 +211,7 @@ def run_full(fresh: dict, baseline: dict, rel_tolerance: float) -> None:
         _gate(f"full.{key}", val is None or val == want,
               f"{val} == {want} (None = unmeasurable, tolerated)")
     for sec in ("", "structural.", "nonexp.", "repair_dist.",
-                "correlated."):
+                "correlated.", "multijob."):
         key = f"{sec}max_abs_z"
         val = _lookup(fresh, key)
         _gate(f"full.{key}", val is not None and val < 4.0,
@@ -197,6 +233,8 @@ def append_history(fresh: dict, path: str) -> None:
         "repair_dist_speedup_x": _lookup(fresh, "repair_dist.speedup_x"),
         "correlated_speedup_x": _lookup(fresh, "correlated.speedup_x"),
         "correlated_compiles": _lookup(fresh, "correlated.sweep_compiles"),
+        "multijob_speedup_x": _lookup(fresh, "multijob.speedup_x"),
+        "multijob_compiles": _lookup(fresh, "multijob.sweep_compiles"),
     }
     with open(path, "a") as f:
         f.write(json.dumps(record) + "\n")

@@ -35,8 +35,10 @@ from .trace import TraceEvent, Tracer
 from .distributions import (Deterministic, Distribution, Exponential,
                             LogNormal, Weibull, make_distribution,
                             register_distribution)
-from .backend import (Replications, resolve_engine, run_replications,
-                      run_replications_batch)
+from .backend import (MultiJobReplications, Replications, resolve_engine,
+                      resolve_engine_multijob, run_multijob_batch,
+                      run_replications, run_replications_batch,
+                      run_replications_multijob)
 from .engine import Environment, Event, Interrupt, Process, Timeout
 from .faultdomains import (Campaign, CampaignEvent, FaultTopology,
                            ShockInjector)
@@ -44,11 +46,15 @@ from .hazards import hazard_kind
 from .histograms import (HIST_CHANNELS, Histogram, HistogramSpec,
                          percentiles_per_row)
 from .metrics import (RunResult, Stat, aggregate, aggregate_arrays,
-                      histograms_from_arrays, histograms_from_results,
-                      summarize)
+                      aggregate_multijob_arrays, histograms_from_arrays,
+                      histograms_from_results, pool_histograms, summarize)
 from .params import MINUTES_PER_DAY, PAPER_TABLE1_RANGES, Params, paper_table1_defaults
 from .simulation import ClusterSimulation, simulate, simulate_one
-from .sweeps import OneWaySweep, SweepResult, TwoWaySweep, load_experiment
+from .sweeps import (MultiJobSweep, OneWaySweep, SweepResult, TwoWaySweep,
+                     load_experiment)
+from .vectorized_multijob import (simulate_multijob_ctmc,
+                                  simulate_multijob_ctmc_sweep,
+                                  supports_multijob)
 
 __all__ = [
     "Bathtub", "Campaign", "CampaignEvent", "CheckpointPlan",
@@ -56,16 +62,23 @@ __all__ = [
     "Distribution", "Environment", "Event", "Exponential", "FaultTopology",
     "HIST_CHANNELS",
     "Histogram", "HistogramSpec", "Interrupt", "ShockInjector",
-    "JobSpec", "LogNormal", "MINUTES_PER_DAY", "MultiJobResult",
-    "MultiJobSimulation", "OneWaySweep", "PAPER_TABLE1_RANGES", "Params",
+    "JobSpec", "LogNormal", "MINUTES_PER_DAY", "MultiJobReplications",
+    "MultiJobResult",
+    "MultiJobSimulation", "MultiJobSweep", "OneWaySweep",
+    "PAPER_TABLE1_RANGES", "Params",
     "Process", "Replications", "RunResult", "Stat", "SweepResult", "Timeout",
     "TraceEvent", "Tracer", "TwoWaySweep", "Weibull", "aggregate",
-    "aggregate_arrays", "cluster_failure_rate", "expected_failures",
+    "aggregate_arrays", "aggregate_multijob_arrays", "cluster_failure_rate",
+    "expected_failures",
     "expected_total_time", "hazard_kind", "histograms_from_arrays",
     "histograms_from_results", "load_experiment", "make_distribution",
-    "percentiles_per_row",
+    "percentiles_per_row", "pool_histograms",
     "paper_table1_defaults", "plan_checkpoints", "register_distribution",
-    "repair_shop_occupancy", "resolve_engine", "run_replications",
-    "run_replications_batch", "simulate", "simulate_multijob", "simulate_one",
-    "spare_capacity_bound", "summarize", "young_daly_interval",
+    "repair_shop_occupancy", "resolve_engine", "resolve_engine_multijob",
+    "run_multijob_batch", "run_replications",
+    "run_replications_batch", "run_replications_multijob", "simulate",
+    "simulate_multijob", "simulate_multijob_ctmc",
+    "simulate_multijob_ctmc_sweep", "simulate_one",
+    "spare_capacity_bound", "summarize", "supports_multijob",
+    "young_daly_interval",
 ]

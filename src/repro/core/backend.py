@@ -32,10 +32,12 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from . import vectorized
+from . import vectorized, vectorized_multijob
 from .histograms import Histogram
 from .metrics import (RunResult, Stat, aggregate, aggregate_arrays,
-                      histograms_from_arrays, histograms_from_results)
+                      aggregate_multijob_arrays, histograms_from_arrays,
+                      histograms_from_results, pool_histograms)
+from .multijob import JobSpec, MultiJobResult, simulate_multijob
 from .params import Params
 from .simulation import simulate
 
@@ -188,4 +190,157 @@ def run_replications_batch(params_list: Sequence[Params], n: int,
                 progress(i)
             results = simulate(params_list[i], n, base_seed=base_seed)
             out[i] = _from_results(results, n, params_list[i])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# multi-job dispatch
+# ---------------------------------------------------------------------------
+
+def resolve_engine_multijob(cluster: Params, jobs: Sequence[JobSpec],
+                            engine: str = "auto") -> str:
+    """Multi-job twin of :func:`resolve_engine`.
+
+    ``auto`` picks the compiled multi-job CTMC engine
+    (:mod:`repro.core.vectorized_multijob`) whenever the cluster is
+    inside its envelope — exponential failures and repairs, all jobs
+    starting at t=0, none of the event-only extensions — and falls back
+    to the event-loop :class:`~repro.core.multijob.MultiJobSimulation`
+    otherwise.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         f"{ENGINES}")
+    supported = vectorized_multijob.supports_multijob(cluster, jobs)
+    if engine == "auto":
+        return "ctmc" if supported else "event"
+    if engine == "ctmc" and not supported:
+        raise ValueError(
+            "engine='ctmc' requested but this multi-job cluster is outside "
+            "the CTMC envelope (see vectorized_multijob.supports_multijob: "
+            "exponential failures+repairs, t=0 starts, no fault domains / "
+            "campaigns / retirement / regeneration / checkpointing / "
+            "failing standbys); use engine='auto' to fall back")
+    return engine
+
+
+@dataclass
+class MultiJobReplications:
+    """Aggregated outcome of one multi-job replication study."""
+
+    engine: str                     # concrete engine that ran
+    n: int                          # number of replications
+    #: one full Replications per job (same Stat keys as single-job runs)
+    per_job: List[Replications]
+    #: fleet-level Stats: makespan, shared-shop counters, stall_handoffs,
+    #: n_shop_queued, conservation_err, completed, fleet_* sums, and
+    #: fleet-pooled {channel}_dist
+    fleet: Dict[str, Stat]
+    #: fleet-pooled streaming histograms (all jobs' channels merged)
+    histograms: Dict[str, Histogram] = field(default_factory=dict)
+
+
+def _multijob_from_arrays(point: Dict[str, object],
+                          n: int) -> MultiJobReplications:
+    agg = aggregate_multijob_arrays(point)
+    per_job = []
+    for arrays, stats, hists in zip(point["per_job"], agg["per_job"],
+                                    agg["per_job_histograms"]):
+        per_job.append(Replications(engine="ctmc", n=n, stats=stats,
+                                    arrays=arrays, histograms=hists))
+    incomplete = int(n - point["completed"].sum())
+    if incomplete:
+        warnings.warn(
+            f"{incomplete}/{n} multi-job CTMC replicas hit the step budget "
+            "before every job finished; means are biased low — raise "
+            "max_steps", RuntimeWarning, stacklevel=3)
+    return MultiJobReplications(engine="ctmc", n=n, per_job=per_job,
+                                fleet=agg["fleet"],
+                                histograms=agg["histograms"])
+
+
+def _multijob_from_results(results: List[MultiJobResult], n: int,
+                           cluster: Params) -> MultiJobReplications:
+    n_jobs = len(results[0].per_job)
+    per_job = [
+        _from_results([r.per_job[j] for r in results], n, cluster)
+        for j in range(n_jobs)]
+    fleet: Dict[str, Stat] = {}
+    lanes = {
+        "makespan": [r.makespan for r in results],
+        "stall_handoffs": [float(r.stall_events) for r in results],
+        "n_auto_repairs": [float(r.cluster.n_auto_repairs)
+                           for r in results],
+        "n_manual_repairs": [float(r.cluster.n_manual_repairs)
+                             for r in results],
+        "n_failed_repairs": [float(r.cluster.n_failed_repairs)
+                             for r in results],
+        "n_shop_queued": [float(r.queue_events) for r in results],
+        # the event loop conserves servers by construction (pinned by
+        # test_multijob_conserves_servers); reported for key parity
+        "conservation_err": [0.0] * n,
+        "completed": [0.0 if any(p.timed_out for p in r.per_job) else 1.0
+                      for r in results],
+        "fleet_n_failures": [float(r.total_failures) for r in results],
+        "fleet_stall_time": [sum(p.stall_time for p in r.per_job)
+                             for r in results],
+        "fleet_useful_work": [sum(p.useful_work for p in r.per_job)
+                              for r in results],
+    }
+    for name, xs in lanes.items():
+        fleet[name] = Stat.of(xs)
+    pooled = pool_histograms([rep.histograms for rep in per_job])
+    for ch, h in pooled.items():
+        fleet[f"{ch}_dist"] = Stat.from_histogram(h)
+    return MultiJobReplications(engine="event", n=n, per_job=per_job,
+                                fleet=fleet, histograms=pooled)
+
+
+def run_replications_multijob(cluster: Params, jobs: Sequence[JobSpec],
+                              n: int, engine: str = "auto",
+                              base_seed: Optional[int] = None,
+                              impl: Optional[str] = None,
+                              max_steps: Optional[int] = None,
+                              ) -> MultiJobReplications:
+    """``n`` independent multi-job replications on the selected engine."""
+    return run_multijob_batch([(cluster, tuple(jobs))], n, engine=engine,
+                              base_seed=base_seed, impl=impl,
+                              max_steps=max_steps)[0]
+
+
+def run_multijob_batch(points: Sequence, n: int, engine: str = "auto",
+                       base_seed: Optional[int] = None,
+                       impl: Optional[str] = None,
+                       max_steps: Optional[int] = None,
+                       ) -> List[MultiJobReplications]:
+    """Multi-job replication studies for a whole capacity grid.
+
+    ``points`` is a sequence of ``(cluster Params, [JobSpec, ...])``
+    pairs.  Every point inside the multi-job CTMC envelope runs in a
+    single :func:`~repro.core.vectorized_multijob.simulate_multijob_ctmc_sweep`
+    call — points sharing a job count compile to ONE XLA program no
+    matter how sizes, rates, or pool/shop capacities vary — and the rest
+    fall back to the event-loop ``MultiJobSimulation`` one by one.
+    """
+    points = [(c, tuple(js)) for c, js in points]
+    chosen = [resolve_engine_multijob(c, js, engine) for c, js in points]
+    out: List[Optional[MultiJobReplications]] = [None] * len(points)
+
+    ctmc_idx = [i for i, c in enumerate(chosen) if c == "ctmc"]
+    if ctmc_idx:
+        seed = (points[ctmc_idx[0]][0].seed if base_seed is None
+                else base_seed)
+        point_outs = vectorized_multijob.simulate_multijob_ctmc_sweep(
+            [points[i] for i in ctmc_idx], n_replicas=n, seed=seed,
+            impl=impl, max_steps=max_steps)
+        for i, po in zip(ctmc_idx, point_outs):
+            out[i] = _multijob_from_arrays(po, n)
+
+    for i, c in enumerate(chosen):
+        if c == "event":
+            cluster, js = points[i]
+            results = simulate_multijob(
+                cluster, list(js), n_replications=n,
+                base_seed=cluster.seed if base_seed is None else base_seed)
+            out[i] = _multijob_from_results(results, n, cluster)
     return out

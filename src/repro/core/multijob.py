@@ -23,7 +23,8 @@ import numpy as np
 
 from .coordinator import Coordinator
 from .engine import Environment
-from .metrics import RunResult
+from .histograms import Histogram, HistogramSpec
+from .metrics import RunResult, histograms_from_results
 from .params import Params
 from .pool import PoolManager
 from .repair import RepairShop
@@ -45,10 +46,32 @@ class MultiJobResult:
     per_job: List[RunResult]
     makespan: float = 0.0               # last job completion
     stall_events: int = 0               # cross-job starvation hand-offs
+    #: cluster-level counters that live on the *shared* repair shop, not
+    #: on any one job: n_auto_repairs / n_manual_repairs /
+    #: n_failed_repairs (and n_retired under retirement policies).
+    #: Historically these were silently dropped — the shop wrote them to
+    #: a RunResult nobody kept — so multi-job repair accounting summed
+    #: to zero; the parity suite pins this merge.
+    cluster: RunResult = field(default_factory=RunResult)
+    #: submissions that found every repair-shop service slot busy
+    #: (finite ``Params.repair_servers`` only; 0 with an unbounded shop)
+    queue_events: int = 0
 
     @property
     def total_failures(self) -> int:
         return sum(r.n_failures for r in self.per_job)
+
+    def per_job_histograms(self, spec: Optional[HistogramSpec],
+                           ) -> List[Dict[str, Histogram]]:
+        """Per-job distribution channels (run_duration/recovery/waiting).
+
+        Each job's coordinator records its own per-run duration lists;
+        binning them through the shared
+        :class:`~repro.core.histograms.HistogramSpec` layout gives the
+        per-job channels the cross-engine parity suite compares bin by
+        bin against the CTMC engine's per-job streaming accumulators.
+        """
+        return [histograms_from_results([r], spec) for r in self.per_job]
 
 
 class Dispatcher:
@@ -155,7 +178,9 @@ class MultiJobSimulation:
         # per-job results carry the failure/replacement/stall accounting
         makespan = max(r.total_time for r in self.results)
         out = MultiJobResult(per_job=self.results, makespan=makespan,
-                             stall_events=self.dispatcher.stall_handoffs)
+                             stall_events=self.dispatcher.stall_handoffs,
+                             cluster=self.repair_metrics,
+                             queue_events=self.repair_shop.n_queued_events)
         return out
 
 

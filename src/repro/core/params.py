@@ -144,6 +144,15 @@ class Params:
     #: metric (the overflowing server stays in the shop forever) — raise
     #: this if that ever fires.  Exponential repairs ignore it.
     repair_slots: int = 0
+    #: finite repair-shop capacity: at most this many servers are *in
+    #: service* (automated or manual stage) at once; further failed
+    #: servers queue inside the shop until a service slot frees up.  A
+    #: freed slot admits a queued server chosen uniformly at random —
+    #: which makes admission class- and owner-proportional over the
+    #: queued counts, the property the CTMC engine's compartment model
+    #: reproduces exactly in law.  0 (default) = unlimited servers (the
+    #: paper's model: every repair starts immediately).
+    repair_servers: int = 0
     #: correlated failure domains: a rack → pod topology with per-level
     #: exponential shock rates.  A shock atomically fails every server
     #: in the struck domain (running, spare, and in-repair alike).
@@ -187,6 +196,9 @@ class Params:
                 "'float64'")
         if self.repair_slots < 0:
             raise ValueError("repair_slots must be non-negative")
+        if self.repair_servers < 0:
+            raise ValueError("repair_servers must be non-negative "
+                             "(0 = unlimited)")
         if self.histogram is not None:
             self.histogram.validate()
         if self.fault_domains is not None:

@@ -14,7 +14,16 @@ Paper §III-C module (4) with assumptions 3-5:
     means (assumption 4); pluggable like failure distributions;
   * optional score-based retirement: a server exceeding
     ``retirement_threshold`` failures within ``retirement_window`` minutes
-    is permanently removed instead of reintegrated.
+    is permanently removed instead of reintegrated;
+  * optional finite capacity (``Params.repair_servers``): at most that
+    many servers are *in service* at once; the rest queue inside the
+    shop.  A departure admits one queued server chosen uniformly at
+    random — class/owner-proportional over the queued counts, which is
+    what the vectorized CTMC engine's compartment model needs for
+    exact-in-law parity.  Escalation to manual repair keeps its service
+    slot (the server never leaves the technician's bench).  Capacity 0
+    (default) queues nothing and draws nothing extra from the RNG, so
+    unlimited-shop runs stay bit-identical to the pre-capacity engine.
 """
 
 from __future__ import annotations
@@ -59,6 +68,13 @@ class RepairShop:
         self.on_return = on_return
         self.on_retire = on_retire
         self.in_repair: set = set()
+        #: service-slot bound (0 = unlimited) + the waiting line behind it
+        self.capacity = params.repair_servers
+        self.queue: list = []
+        self._n_active = 0
+        #: lifetime count of submissions that had to queue (shop full) —
+        #: the event twin of the CTMC engine's n_shop_queued lane
+        self.n_queued_events = 0
         self._auto_dist, self._manual_dist = repair_distributions(params)
         #: sid -> live repair Process (fault-domain rebreaks / maintenance
         #: pauses need a handle to interrupt specific stages)
@@ -68,16 +84,50 @@ class RepairShop:
 
     # -- public API ----------------------------------------------------------
     def submit(self, server: Server) -> None:
-        """Send a failed server through the repair pipeline (async)."""
+        """Send a failed server through the repair pipeline (async).
+
+        With finite capacity, a full shop parks the server in the queue
+        instead; it is still "in the shop" (``in_repair``) for
+        conservation accounting, just not yet in service.
+        """
         if server in self.in_repair:
             raise RuntimeError(f"{server!r} already in repair")
         self.in_repair.add(server)
+        if self.capacity and self._n_active >= self.capacity:
+            server.state = ServerState.REPAIR_AUTO   # waiting for the bench
+            self.queue.append(server)
+            self.n_queued_events += 1
+            return
+        self._start_service(server)
+
+    def _start_service(self, server: Server) -> None:
+        self._n_active += 1
         self._procs[server.sid] = self.env.process(
             self._repair_process(server), name=f"repair-{server.sid}")
+
+    def _depart(self) -> None:
+        """A server left service: free its slot and admit from the queue.
+
+        Admission is a *uniform* draw over the queued servers, not FIFO:
+        uniform-over-servers equals proportional-over-(class, owner)
+        counts, the exchangeability property that makes the compiled
+        CTMC engine's count-based admission exact in law.  An empty
+        queue draws nothing, so capacity-0 runs never touch the RNG.
+        """
+        self._n_active -= 1
+        if self.queue and (not self.capacity
+                           or self._n_active < self.capacity):
+            idx = int(self.rng.integers(len(self.queue)))
+            nxt = self.queue.pop(idx)
+            self._start_service(nxt)
 
     @property
     def n_in_repair(self) -> int:
         return len(self.in_repair)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.queue)
 
     # -- fault-domain hooks (see repro.core.faultdomains) --------------------
     def pause(self) -> None:
@@ -165,6 +215,7 @@ class RepairShop:
 
         self.in_repair.discard(server)
         self._procs.pop(server.sid, None)
+        self._depart()
 
         # Score-based retirement (extension; off when threshold == 0).
         if (p.retirement_threshold > 0 and

@@ -195,6 +195,15 @@ def supports(params: Params) -> bool:
     >>> supports(Params(retirement_threshold=3))
     False
 
+    Finite repair-shop capacity (``Params.repair_servers``) is modeled
+    by the *multi-job* CTMC engine (:mod:`repro.core.vectorized_multijob`,
+    which partitions the shop by owning job and carries a queued-server
+    lane); the single-job program has no queue compartment, so such
+    params route to the event engine here:
+
+    >>> supports(Params(repair_servers=8))
+    False
+
     Correlated fault domains and injection campaigns
     (:mod:`repro.core.faultdomains`) stay on the fast path under
     exponential repairs — a struck in-shop server's stage restart is
@@ -213,6 +222,7 @@ def supports(params: Params) -> bool:
     return (hazards.hazard_kind(params) is not None
             and hazards.repair_kind(params) is not None
             and scenario_ok
+            and params.repair_servers == 0
             and params.retirement_threshold == 0
             and params.bad_set_regeneration_period == 0
             and params.checkpoint_interval == 0

@@ -256,6 +256,148 @@ def test_bucketed_sweep_value_identical_on_real_rows(n_points, n_rep, seed):
                                           err_msg=f"point {i} metric {k}")
 
 
+# ---------------------------------------------------------------------------
+# multi-job shared-pool properties (dispatcher fairness, determinism,
+# job-permutation invariance) — both engines
+# ---------------------------------------------------------------------------
+
+def _mj_contended() -> Params:
+    """Tight shared pool + slow finite shop: stalls are near-certain."""
+    return Params(working_pool_size=26, spare_pool_size=2, job_size=8,
+                  job_length=800.0, random_failure_rate=0.01,
+                  systematic_failure_rate=0.02, auto_repair_time=120.0,
+                  manual_repair_time=300.0, repair_servers=2,
+                  histogram=None)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_multijob_dispatcher_fifo_fairness(seed):
+    """A repaired server handed to a stalled job always goes to the one
+    stalled *earliest*: a job that stalled first is never passed over in
+    favor of one that stalled later (FIFO starvation-freedom)."""
+    from repro.core import JobSpec
+    from repro.core.multijob import MultiJobSimulation
+
+    jobs = [JobSpec(12, 800.0, warm_standbys=0),
+            JobSpec(12, 1000.0, warm_standbys=0)]
+    sim = MultiJobSimulation(_mj_contended(), jobs, seed=seed)
+    disp = sim.dispatcher
+    orig = disp.on_server_return
+    handoffs = []
+
+    def checked(server):
+        stalled = [s for s in disp.schedulers
+                   if s._stall_event is not None
+                   and not s._stall_event.triggered]
+        before = disp.stall_handoffs
+        orig(server)
+        if disp.stall_handoffs == before + 1:
+            receiver = next(s for s in stalled
+                            if s._stall_event.triggered)
+            handoffs.append((receiver._stall_since,
+                             min(s._stall_since for s in stalled)))
+
+    # the shop captured the dispatcher's bound method at construction
+    sim.repair_shop.on_return = checked
+    sim.run()
+    assert handoffs, "config failed to produce any stall hand-off"
+    for got, earliest in handoffs:
+        assert got == earliest
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 1000))
+def test_multijob_seed_deterministic_both_engines(seed):
+    """Same seed => identical multi-job results, on each engine."""
+    from repro.core import (JobSpec, simulate_multijob,
+                            simulate_multijob_ctmc_sweep)
+
+    cluster = Params(working_pool_size=30, spare_pool_size=3, job_size=8,
+                     job_length=300.0, random_failure_rate=0.004,
+                     systematic_failure_rate=0.01, auto_repair_time=60.0,
+                     manual_repair_time=150.0, repair_servers=2,
+                     histogram=None)
+    jobs = (JobSpec(12, 300.0, warm_standbys=1),
+            JobSpec(8, 400.0, warm_standbys=1))
+
+    a, b = (simulate_multijob_ctmc_sweep([(cluster, jobs)], n_replicas=8,
+                                         seed=seed)[0] for _ in range(2))
+    np.testing.assert_array_equal(a["makespan"], b["makespan"])
+    for j in range(len(jobs)):
+        for k in ("total_time", "n_failures", "stall_time"):
+            np.testing.assert_array_equal(a["per_job"][j][k],
+                                          b["per_job"][j][k])
+
+    r0, r1 = (simulate_multijob(cluster, list(jobs), n_replications=2,
+                                base_seed=seed) for _ in range(2))
+    for x, y in zip(r0, r1):
+        assert x.makespan == y.makespan
+        assert x.stall_events == y.stall_events
+        for px, py in zip(x.per_job, y.per_job):
+            assert px.total_time == py.total_time
+            assert px.n_failures == py.n_failures
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.permutations([0, 1, 2]), st.integers(0, 500))
+def test_multijob_fleet_metrics_permutation_invariant(perm, seed):
+    """Relabeling jobs must not change fleet-pooled outcomes.  With no
+    failures the trajectories are deterministic, so the invariance is
+    exact on both engines (per-job marginals follow the permutation)."""
+    from repro.core import (JobSpec, simulate_multijob,
+                            simulate_multijob_ctmc_sweep)
+
+    cluster = Params(working_pool_size=30, spare_pool_size=2, job_size=4,
+                     job_length=50.0, random_failure_rate=0.0,
+                     systematic_failure_rate=0.0, histogram=None)
+    jobs = [JobSpec(8, 50.0, warm_standbys=1),
+            JobSpec(6, 80.0, warm_standbys=1),
+            JobSpec(4, 30.0, warm_standbys=0)]
+    permuted = [jobs[i] for i in perm]
+
+    r0 = simulate_multijob(cluster, jobs, base_seed=seed)[0]
+    r1 = simulate_multijob(cluster, permuted, base_seed=seed)[0]
+    assert r0.makespan == r1.makespan
+    assert (sorted(r.total_time for r in r0.per_job)
+            == sorted(r.total_time for r in r1.per_job))
+
+    p0 = simulate_multijob_ctmc_sweep([(cluster, tuple(jobs))],
+                                      n_replicas=4, seed=seed)[0]
+    p1 = simulate_multijob_ctmc_sweep([(cluster, tuple(permuted))],
+                                      n_replicas=4, seed=seed)[0]
+    np.testing.assert_array_equal(p0["makespan"], p1["makespan"])
+    for j, pj in enumerate(perm):
+        np.testing.assert_array_equal(p0["per_job"][pj]["total_time"],
+                                      p1["per_job"][j]["total_time"])
+
+
+def test_multijob_permutation_invariant_in_law_with_failures():
+    """With failures the fleet-pooled distribution is exchangeable in
+    the job labels: permuting the job list moves the per-job marginals
+    with it and leaves fleet metrics statistically unchanged."""
+    from repro.core import JobSpec, simulate_multijob_ctmc_sweep
+
+    cluster = Params(working_pool_size=40, spare_pool_size=4, job_size=8,
+                     job_length=500.0, random_failure_rate=0.003,
+                     systematic_failure_rate=0.008, auto_repair_time=90.0,
+                     manual_repair_time=240.0, repair_servers=2,
+                     histogram=None)
+    jobs = (JobSpec(16, 500.0, warm_standbys=1),
+            JobSpec(8, 700.0, warm_standbys=1))
+    p0 = simulate_multijob_ctmc_sweep([(cluster, jobs)],
+                                      n_replicas=512, seed=3)[0]
+    p1 = simulate_multijob_ctmc_sweep([(cluster, jobs[::-1])],
+                                      n_replicas=512, seed=4)[0]
+    for metric in ("makespan", "stall_handoffs", "n_auto_repairs",
+                   "n_shop_queued"):
+        a = np.asarray(p0[metric], float)
+        b = np.asarray(p1[metric], float)
+        se = math.sqrt(a.var(ddof=1) / len(a) + b.var(ddof=1) / len(b))
+        z = (a.mean() - b.mean()) / max(se, 1e-12)
+        assert abs(z) < 4.0, f"{metric}: z={z:+.2f}"
+
+
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 60))
 def test_expected_failures_scaling(seed):
