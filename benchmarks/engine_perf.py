@@ -297,6 +297,60 @@ def repair_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
     }
 
 
+def empirical_bench_params() -> Params:
+    """The trace-driven benchmark scenario, shared with the CI quick
+    gate (scripts/check_bench.py) so the gate always measures the same
+    scenario it compares against: a 64-server job under a fitted-style
+    3-segment piecewise-constant hazard (elevated wear-in, a settling
+    middle segment, a long flat tail — the canonical shape
+    ``fit_piecewise_hazard`` recovers from fleet failure logs).  The
+    *shape* kwargs are mean-rescaled against ``random_failure_rate``;
+    the edges are chosen so the scaled breakpoints (~40 and ~200 min)
+    sit inside the ages a restart-reset phase actually visits.  The
+    event engine's generic sampler pays O(cluster) Python-level draws
+    per restart here; the CTMC samples by segment-wise conditional
+    inversion with an exact per-segment majorant."""
+    return Params(job_size=64, working_pool_size=72, spare_pool_size=8,
+                  warm_standbys=4, job_length=1 * MINUTES_PER_DAY,
+                  random_failure_rate=0.5 / MINUTES_PER_DAY,
+                  failure_distribution="empirical",
+                  distribution_kwargs={"edges": [0.02, 0.1],
+                                       "rates": [2.5, 1.0, 0.7]},
+                  seed=0)
+
+
+def empirical_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
+                               ) -> Dict[str, object]:
+    """Trace-driven grid on the fast path: empirical hazards vs the
+    event engine.
+
+    Before the piecewise-constant sampler existed, every log-fitted
+    hazard fell back to the one-trajectory event engine — the exact
+    studies the simulator exists for (replaying a fleet's measured
+    failure curve) were the slowest ones it supported.  Sweeps the
+    recovery-time grid under the shared 3-segment fitted-style hazard
+    through both engines.  The segment *count* is the only static
+    compile key — edges and rates are traced columns — so the whole
+    grid must compile exactly one XLA program (``sweep_compiles``);
+    the acceptance floor for this entry is a >= 5x warm speedup
+    (scripts/check_bench.py gates both).
+    """
+    from repro.core import vectorized
+
+    base = empirical_bench_params().replace(
+        max_run_records=81)   # bench-unique jit shapes
+    c0 = vectorized.compile_cache_size()
+    out = _engine_ab_sweep(base, n_points, n_replicas, "empirical-bench")
+    c1 = vectorized.compile_cache_size()
+    return {
+        "failure_distribution": base.failure_distribution,
+        "distribution_kwargs": dict(base.distribution_kwargs),
+        "n_segments": len(base.distribution_kwargs["rates"]),
+        "sweep_compiles": None if c0 is None else c1 - c0,
+        **out,
+    }
+
+
 def correlated_bench_params(job_length: float = None) -> Params:
     """The correlated-failure benchmark scenario, shared with the CI
     quick gate (scripts/check_bench.py): a 256-server job under
@@ -682,16 +736,18 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
     sw["bucketing"] = bucketed_sweep_throughput()
     sw["nonexp"] = weibull_sweep_throughput()
     sw["repair_dist"] = repair_sweep_throughput()
+    sw["empirical"] = empirical_sweep_throughput()
     sw["correlated"] = correlated_sweep_throughput()
     sw["multijob"] = multijob_sweep_throughput()
     sections = ("points", "structural", "bucketing", "nonexp", "repair_dist",
-                "correlated", "multijob")
+                "empirical", "correlated", "multijob")
     print(json.dumps({k: v for k, v in sw.items() if k not in sections},
                      indent=2))
     print(json.dumps({k: v for k, v in sw["structural"].items()
                       if k != "points"}, indent=2))
     print(json.dumps(sw["bucketing"], indent=2))
-    for sec in ("nonexp", "repair_dist", "correlated", "multijob"):
+    for sec in ("nonexp", "repair_dist", "empirical", "correlated",
+                "multijob"):
         print(json.dumps({k: v for k, v in sw[sec].items()
                           if k != "points"}, indent=2))
     print("wrote", write_sweep_artifact(sw))

@@ -39,6 +39,7 @@ FULL_SPEEDUP_FLOORS = {
     "speedup_x": 3.0,            # exponential baseline sweep
     "nonexp.speedup_x": 5.0,     # weibull failure grid
     "repair_dist.speedup_x": 5.0,   # repair-policy grid (acceptance)
+    "empirical.speedup_x": 5.0,     # trace-driven hazard grid (acceptance)
     "correlated.speedup_x": 5.0,    # fault-domain scenario grid (acceptance)
     "multijob.speedup_x": 4.0,      # shared-pool capacity grid (acceptance)
 }
@@ -47,6 +48,8 @@ FULL_SPEEDUP_FLOORS = {
 FULL_COMPILE_GATES = {
     "structural.padded_compiles": 1,
     "bucketing.bucketed_compiles": 1,
+    # segment count is the only static key: one program per fitted grid
+    "empirical.sweep_compiles": 1,
     # the scenario's rates/times are traced: one program per shock grid
     "correlated.sweep_compiles": 1,
     # J is the only static key: one program per mixed-size capacity grid
@@ -138,6 +141,22 @@ def run_quick(baseline: dict, tolerance: float) -> None:
           f"{'MISSING' if b_rep is None else f'{b_rep:.2f}x'} (8x256); "
           f"floor {tolerance:.2f}x of committed")
 
+    # the trace-driven empirical scenario (shared factory): a fitted-
+    # style 3-segment hazard through the piecewise-constant sampler —
+    # the gate that catches a log-fitted study silently collapsing back
+    # onto the O(cluster)-per-restart event engine
+    from benchmarks.engine_perf import empirical_bench_params
+
+    ebase = empirical_bench_params().replace(
+        job_length=0.5 * MINUTES_PER_DAY, max_run_records=65)
+    q_emp = _quick_ab(ebase, "recovery_time", [5.0, 15.0, 25.0, 35.0], 64)
+    b_emp = _lookup(baseline, "empirical.speedup_x")
+    _gate("quick.empirical_speedup",
+          b_emp is not None and q_emp >= tolerance * b_emp,
+          f"measured {q_emp:.2f}x warm (4x64 grid) vs committed "
+          f"{'MISSING' if b_emp is None else f'{b_emp:.2f}x'} (8x256); "
+          f"floor {tolerance:.2f}x of committed")
+
     # the correlated-failure scenario (shared factory again): domain
     # shocks + a scripted kill + a maintenance window, swept over the
     # rack shock rate — the gate that catches the scenario race lanes
@@ -211,7 +230,7 @@ def run_full(fresh: dict, baseline: dict, rel_tolerance: float) -> None:
         _gate(f"full.{key}", val is None or val == want,
               f"{val} == {want} (None = unmeasurable, tolerated)")
     for sec in ("", "structural.", "nonexp.", "repair_dist.",
-                "correlated.", "multijob."):
+                "empirical.", "correlated.", "multijob."):
         key = f"{sec}max_abs_z"
         val = _lookup(fresh, key)
         _gate(f"full.{key}", val is not None and val < 4.0,
@@ -231,6 +250,8 @@ def append_history(fresh: dict, path: str) -> None:
         "bucketing_compiles": _lookup(fresh, "bucketing.bucketed_compiles"),
         "nonexp_speedup_x": _lookup(fresh, "nonexp.speedup_x"),
         "repair_dist_speedup_x": _lookup(fresh, "repair_dist.speedup_x"),
+        "empirical_speedup_x": _lookup(fresh, "empirical.speedup_x"),
+        "empirical_compiles": _lookup(fresh, "empirical.sweep_compiles"),
         "correlated_speedup_x": _lookup(fresh, "correlated.speedup_x"),
         "correlated_compiles": _lookup(fresh, "correlated.sweep_compiles"),
         "multijob_speedup_x": _lookup(fresh, "multijob.speedup_x"),

@@ -57,7 +57,7 @@ python -m pytest -q -p no:randomly -p no:cacheprovider --doctest-modules \
     src/repro/core/params.py src/repro/core/histograms.py \
     src/repro/core/backend.py src/repro/core/sweeps.py \
     src/repro/core/vectorized.py src/repro/core/hazards.py \
-    src/repro/core/faultdomains.py
+    src/repro/core/faultdomains.py src/repro/core/empirical.py
 
 # docs suite link check: every relative markdown link in README/docs
 # must resolve to a real file (no network; scheme links are skipped)
@@ -70,7 +70,11 @@ python scripts/check_links.py
 python -m pytest -q -p no:randomly -p no:cacheprovider \
     tests/test_histograms.py tests/test_bucketing.py tests/test_nonexp.py \
     tests/test_repair_dist.py tests/test_faultdomains.py \
-    tests/test_multijob_parity.py
+    tests/test_multijob_parity.py tests/test_empirical.py
+
+# trace-driven fitting smoke: synthetic log -> fit_piecewise_hazard ->
+# JSON round trip -> a short CTMC study from the fitted hazard
+python scripts/fit_hazard.py --selftest
 
 # compile-count smokes: a tiny mixed-structure grid must compile exactly
 # one XLA program per padded group, two same-bucket sweeps of different

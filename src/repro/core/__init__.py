@@ -15,6 +15,7 @@ implemented as a composable library:
   * :mod:`analytical`    — closed-form cross-checks + Young/Daly cadence
   * :mod:`vectorized`    — JAX CTMC engine for massive parameter sweeps
   * :mod:`hazards`       — non-exponential hazard math for the fast path
+  * :mod:`empirical`     — trace-driven piecewise-constant hazard fitting
   * :mod:`faultdomains`  — correlated failure domains + injection campaigns
   * :mod:`histograms`    — streaming distribution telemetry (both engines)
   * :mod:`backend`       — engine dispatch (auto | event | ctmc)
@@ -39,6 +40,8 @@ from .backend import (MultiJobReplications, Replications, resolve_engine,
                       resolve_engine_multijob, run_multijob_batch,
                       run_replications, run_replications_batch,
                       run_replications_multijob)
+from .empirical import (Empirical, PiecewiseFit, fit_piecewise_hazard,
+                        from_log, from_mttf_table)
 from .engine import Environment, Event, Interrupt, Process, Timeout
 from .faultdomains import (Campaign, CampaignEvent, FaultTopology,
                            ShockInjector)
@@ -59,18 +62,20 @@ from .vectorized_multijob import (simulate_multijob_ctmc,
 __all__ = [
     "Bathtub", "Campaign", "CampaignEvent", "CheckpointPlan",
     "ClusterSimulation", "Deterministic",
-    "Distribution", "Environment", "Event", "Exponential", "FaultTopology",
+    "Distribution", "Empirical", "Environment", "Event", "Exponential",
+    "FaultTopology",
     "HIST_CHANNELS",
     "Histogram", "HistogramSpec", "Interrupt", "ShockInjector",
     "JobSpec", "LogNormal", "MINUTES_PER_DAY", "MultiJobReplications",
     "MultiJobResult",
     "MultiJobSimulation", "MultiJobSweep", "OneWaySweep",
-    "PAPER_TABLE1_RANGES", "Params",
+    "PAPER_TABLE1_RANGES", "Params", "PiecewiseFit",
     "Process", "Replications", "RunResult", "Stat", "SweepResult", "Timeout",
     "TraceEvent", "Tracer", "TwoWaySweep", "Weibull", "aggregate",
     "aggregate_arrays", "aggregate_multijob_arrays", "cluster_failure_rate",
     "expected_failures",
-    "expected_total_time", "hazard_kind", "histograms_from_arrays",
+    "expected_total_time", "fit_piecewise_hazard", "from_log",
+    "from_mttf_table", "hazard_kind", "histograms_from_arrays",
     "histograms_from_results", "load_experiment", "make_distribution",
     "percentiles_per_row", "pool_histograms",
     "paper_table1_defaults", "plan_checkpoints", "register_distribution",

@@ -7,7 +7,9 @@ AIReSim has two engines with one statistical contract:
     distributions, checkpoint rollback), one trajectory at a time.
   * ``ctmc``  — the vectorized JAX engine (:mod:`repro.core.vectorized`).
     Covers the paper's exponential model, the age-dependent Weibull /
-    bathtub / lognormal failure families, *and* Weibull / lognormal /
+    bathtub / lognormal failure families, trace-driven ``empirical``
+    piecewise-constant hazards (fitted from event logs via
+    :mod:`repro.core.empirical`), *and* Weibull / lognormal /
     deterministic repair distributions (see ``vectorized.supports`` and
     docs/distributions.md), simulating thousands of replicas — and, via
     :func:`run_replications_batch`, whole sweep grids, including
@@ -51,14 +53,16 @@ def resolve_engine(params: Params, engine: str = "auto") -> str:
                          f"{ENGINES}")
     if engine == "auto":
         return "ctmc" if vectorized.supports(params) else "event"
-    if engine == "ctmc" and not vectorized.supports(params):
-        raise ValueError(
-            "engine='ctmc' requested but these Params are outside the CTMC "
-            "envelope (failure distribution not exponential/weibull/"
-            "bathtub/lognormal, repair distribution not exponential/"
-            "weibull/lognormal/deterministic, retirement, bad-set "
-            "regeneration, checkpoint_interval > 0, or failing standbys); "
-            "use engine='auto' to fall back to the event engine")
+    if engine == "ctmc":
+        # built from vectorized.unsupported_reasons — the single source
+        # of truth shared with supports() — so the message names the
+        # *actual* exclusion(s) instead of a hand-maintained stale list
+        reasons = vectorized.unsupported_reasons(params)
+        if reasons:
+            raise ValueError(
+                "engine='ctmc' requested but these Params are outside "
+                "the CTMC envelope: " + "; ".join(reasons)
+                + "; use engine='auto' to fall back to the event engine")
     return engine
 
 
@@ -211,16 +215,18 @@ def resolve_engine_multijob(cluster: Params, jobs: Sequence[JobSpec],
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected one of "
                          f"{ENGINES}")
-    supported = vectorized_multijob.supports_multijob(cluster, jobs)
     if engine == "auto":
-        return "ctmc" if supported else "event"
-    if engine == "ctmc" and not supported:
-        raise ValueError(
-            "engine='ctmc' requested but this multi-job cluster is outside "
-            "the CTMC envelope (see vectorized_multijob.supports_multijob: "
-            "exponential failures+repairs, t=0 starts, no fault domains / "
-            "campaigns / retirement / regeneration / checkpointing / "
-            "failing standbys); use engine='auto' to fall back")
+        return ("ctmc"
+                if vectorized_multijob.supports_multijob(cluster, jobs)
+                else "event")
+    if engine == "ctmc":
+        reasons = vectorized_multijob.unsupported_reasons_multijob(
+            cluster, jobs)
+        if reasons:
+            raise ValueError(
+                "engine='ctmc' requested but this multi-job cluster is "
+                "outside the CTMC envelope: " + "; ".join(reasons)
+                + "; use engine='auto' to fall back")
     return engine
 
 

@@ -69,6 +69,21 @@ Sampling mechanisms per failure family:
   too.  Validity needs exactly ``g_bar >= g`` on ``[a, a + W]``, which
   the convexity argument gives for every parameterization.
 
+* **Empirical** (:mod:`repro.core.empirical`) — piecewise-constant
+  hazards fit from measured failure logs, thinned with an *exact*
+  majorant.  The hazard is constant inside each segment, so over the
+  window ending at the next segment edge the supremum is the current
+  rate itself: candidates are accepted with probability ~1 and the only
+  phantoms are the segment-boundary re-anchors.  Random and systematic
+  clocks carry independent ``(edges, rates)`` arrays (a registered
+  distribution opting in via the ``hazard_segments()`` protocol may
+  shape them arbitrarily per clock), padded to one shared segment count
+  — the only *static* compile key; edges and rates are traced, so a
+  grid over hazards fitted from different log slices is one XLA
+  program.  A single-segment empirical hazard is memoryless and
+  dispatches to the exact exponential program (bit-identical
+  reduction).
+
 * **Lognormal** — mode-bound majorization with Ogata thinning.  The
   lognormal hazard is neither monotone nor convex: it rises from zero
   to a single interior maximum and then decays, so the bathtub endpoint
@@ -91,6 +106,7 @@ parameter matrix, and the JAX helpers evaluate the hazards / inversions
 from __future__ import annotations
 
 import math
+import warnings
 from functools import lru_cache
 from typing import Optional
 
@@ -101,18 +117,21 @@ from jax.scipy.special import log_ndtr, ndtri
 from .bathtub import Bathtub
 from .distributions import (Deterministic, LogNormal, Weibull,
                             failure_distribution)
+from .empirical import Empirical, pad_segments, validate_segments
 from .params import Params
 
 #: failure-distribution families the vectorized engine can run.  The
 #: kind is a *static* compile-time switch: each family compiles its own
 #: step program (exponential keeps the exact pre-existing one).
-HAZARD_KINDS = ("exponential", "weibull", "bathtub", "lognormal")
+HAZARD_KINDS = ("exponential", "weibull", "bathtub", "lognormal",
+                "empirical")
 
 #: repair-distribution families the vectorized engine can run.
 #: Exponential keeps the original count-based repair compartments (the
 #: memoryless case needs no per-server state); the others run the
 #: repair-slot lane with durations sampled at entry by inverse CDF.
-REPAIR_KINDS = ("exponential", "weibull", "lognormal", "deterministic")
+REPAIR_KINDS = ("exponential", "weibull", "lognormal", "deterministic",
+                "empirical")
 
 #: hazard parameter columns appended to the 15 base parameter columns.
 #: Interpretation depends on the (static) hazard kind:
@@ -120,6 +139,10 @@ REPAIR_KINDS = ("exponential", "weibull", "lognormal", "deterministic")
 #:   bathtub   : [infant_factor, infant_tau, wear_start, wear_tau, window]
 #:   lognormal : [scale_rand, scale_sys, sigma, mode_rel, window]
 #:   exponential : all zeros (unused)
+#: The empirical family's block is segment-count-dependent instead —
+#:   empirical : [rand_edges (m-1), rand_rates (m),
+#:                sys_edges (m-1), sys_rates (m)]      (4m - 2 columns)
+#: with m the static segment count; use :func:`hazard_col_count`.
 N_HAZARD_COLS = 5
 
 #: repair parameter columns appended after the hazard columns.
@@ -128,7 +151,29 @@ N_HAZARD_COLS = 5
 #:   lognormal     : [scale_auto, scale_man, sigma]
 #:   deterministic : [value_auto, value_man, 0]
 #:   exponential   : all zeros (unused — legacy rate-race path)
+#:   empirical     : [auto_edges (m-1), auto_rates (m),
+#:                    man_edges (m-1), man_rates (m)]   (4m - 2 columns)
+#: See :func:`repair_col_count` for the kind-dependent width.
 N_REPAIR_COLS = 3
+
+
+def hazard_col_count(kind: Optional[str], n_segments: int = 0) -> int:
+    """Width of the hazard-column block for this (static) family.
+
+    Closed-form families share the fixed :data:`N_HAZARD_COLS` layout;
+    the empirical family's width grows with the static segment count.
+
+    >>> hazard_col_count("weibull")
+    5
+    >>> hazard_col_count("empirical", 4)
+    14
+    """
+    return 4 * n_segments - 2 if kind == "empirical" else N_HAZARD_COLS
+
+
+def repair_col_count(kind: Optional[str], n_segments: int = 0) -> int:
+    """Width of the repair-column block for this (static) family."""
+    return 4 * n_segments - 2 if kind == "empirical" else N_REPAIR_COLS
 
 #: fraction of the fastest bathtub time constant used as the thinning
 #: window W: small enough that the endpoint majorant stays tight
@@ -175,62 +220,186 @@ def _scipy_available() -> bool:
     peak hazard via ``scipy.special.log_ndtr``).  scipy ships with jax's
     own dependency set, but if it is ever absent the graceful-degrade
     convention applies: dispatch falls back to the event engine instead
-    of committing to the fast path and crashing mid-run."""
+    of committing to the fast path and crashing mid-run.  The fallback
+    is loud — a one-time RuntimeWarning (the lru_cache makes it fire
+    once) — because a mis-provisioned environment silently running the
+    O(cluster)-per-restart event engine looks like a perf regression,
+    not a packaging problem."""
     try:
         import scipy.special  # noqa: F401
         return True
-    except ImportError:  # pragma: no cover - scipy rides with jax
+    except ImportError:
+        warnings.warn(
+            "scipy is unavailable: lognormal failure hazards cannot run "
+            "on the vectorized fast path, so engine='auto' will fall "
+            "back to the much slower O(cluster)-per-restart event "
+            "engine for them (install scipy to restore the CTMC path)",
+            RuntimeWarning, stacklevel=2)
         return False
+
+
+def _clock_segments(dist):
+    """Classify one clock's distribution for the piecewise-constant path.
+
+    Returns ``(edges, rates)`` float arrays for a fast-path-eligible
+    clock, the string ``"off"`` for a clock that never fires (disabled
+    — ``hazard_segments()`` returned None), or None when the
+    distribution is ineligible (no ``hazard_segments()`` protocol, or
+    segments that fail :func:`repro.core.empirical.validate_segments`).
+    """
+    probe = getattr(dist, "hazard_segments", None)
+    if probe is None or not callable(probe):
+        return None
+    try:
+        seg = probe()
+    except Exception:  # graceful-degrade: user protocol code may raise
+        return None
+    if seg is None:
+        return "off"
+    try:
+        edges, rates = seg
+    except (TypeError, ValueError):
+        return None
+    if not validate_segments(edges, rates):
+        return None
+    return (np.asarray(edges, dtype=float), np.asarray(rates, dtype=float))
+
+
+def _piecewise_pair_kind(d_rand, d_sys) -> Optional[str]:
+    """Dispatch for the piecewise-constant path (a pair of clocks).
+
+    Any registered distribution exposing the ``hazard_segments()``
+    protocol qualifies — this absorbs the old "user-registered
+    distributions are event-engine-only" carve-out.  A single-segment
+    builtin :class:`Empirical` is memoryless with rate exactly
+    ``1 / mean``, so it collapses to the exponential program
+    (bit-identical reduction).
+    """
+    if d_rand is None or d_sys is None:
+        return None
+    s_rand = _clock_segments(d_rand)
+    s_sys = _clock_segments(d_sys)
+    if s_rand is None or s_sys is None:
+        return None
+    if (isinstance(d_rand, Empirical) and d_rand.n_segments == 1
+            and isinstance(d_sys, Empirical) and d_sys.n_segments == 1):
+        return "exponential"
+    return "empirical"
 
 
 def hazard_kind(params: Params) -> Optional[str]:
     """The vectorized engine's failure-hazard family, or None.
 
-    None means the failure distribution is outside the fast path
-    (deterministic, user-registered — including a re-registered name
-    that no longer builds the expected class) and the event engine must
-    run it.  Degenerate parameters (``k <= 0``, non-positive taus,
-    ``infant_factor < 1`` which would break the ``g >= 1``
-    acceptance-probability bound, ``sigma <= 0``) also return None
-    rather than raising.
+    None means the failure distribution is outside the fast path and
+    the event engine must run it: deterministic failures, and
+    registered distributions — including a re-registered builtin name
+    that no longer builds the expected class — that do not opt in via
+    the ``hazard_segments()`` piecewise-constant protocol.  Degenerate
+    parameters (``k <= 0``, non-positive taus, ``infant_factor < 1``
+    which would break the ``g >= 1`` acceptance-probability bound,
+    ``sigma <= 0``, empty / duplicate / non-monotone empirical segment
+    edges, defective zero-rate tails) also return None rather than
+    raising.  A single-segment builtin empirical hazard is memoryless
+    and returns "exponential" (bit-identical program reduction).
     """
     name = params.failure_distribution.lower()
     if name == "exponential":
         return "exponential"
-    if name not in ("weibull", "bathtub", "lognormal"):
-        return None
     dist = _build_distribution(params, params.random_failure_rate)
-    if isinstance(dist, Weibull):
+    if name == "weibull" and isinstance(dist, Weibull):
         return "weibull" if dist.k > 0 else None
-    if isinstance(dist, Bathtub):
+    if name == "bathtub" and isinstance(dist, Bathtub):
         ok = (dist.infant_factor >= 1.0 and dist.infant_tau > 0
               and dist.wear_tau > 0)
         return "bathtub" if ok else None
-    if isinstance(dist, LogNormal):
+    if name == "lognormal" and isinstance(dist, LogNormal):
         return "lognormal" if dist.sigma > 0 and _scipy_available() else None
-    return None
+    # everything else — the builtin "empirical" family and any registered
+    # distribution opting in via the hazard_segments() protocol — runs
+    # the piecewise-constant program (None keeps it on the event engine)
+    return _piecewise_pair_kind(
+        dist, _build_distribution(params, params.systematic_failure_rate))
 
 
 def repair_kind(params: Params) -> Optional[str]:
     """The vectorized engine's repair family for these Params, or None.
 
     Mirrors :func:`hazard_kind` for the repair side: None routes the
-    point to the event engine (user-registered families, or degenerate
-    parameters — ``k <= 0``, ``sigma <= 0``).
+    point to the event engine (registered families without the
+    ``hazard_segments()`` protocol, or degenerate parameters —
+    ``k <= 0``, ``sigma <= 0``, invalid empirical segments).  The
+    empirical pair here is (auto, manual) rather than (random,
+    systematic); a single-segment builtin empirical repair collapses to
+    the exponential repair program the same way.
     """
     name = params.repair_distribution.lower()
     if name == "exponential":
         return "exponential"
-    if name not in ("weibull", "lognormal", "deterministic"):
-        return None
-    auto, _ = _build_repair_distributions(params)
-    if isinstance(auto, Weibull):
+    auto, man = _build_repair_distributions(params)
+    if name == "weibull" and isinstance(auto, Weibull):
         return "weibull" if auto.k > 0 else None
-    if isinstance(auto, LogNormal):
+    if name == "lognormal" and isinstance(auto, LogNormal):
         return "lognormal" if auto.sigma > 0 else None
-    if isinstance(auto, Deterministic):
+    if name == "deterministic" and isinstance(auto, Deterministic):
         return "deterministic"
-    return None
+    return _piecewise_pair_kind(auto, man)
+
+
+def _padded_pair_count(d_a, d_b) -> int:
+    """Shared segment count for a pair of piecewise-constant clocks.
+
+    The max over both clocks' fitted counts, floored at 2 so the traced
+    edge arrays are never zero-width (a genuinely single-segment builtin
+    hazard never reaches here — it collapses to the exponential
+    program in dispatch).
+    """
+    n = 1
+    for d in (d_a, d_b):
+        seg = _clock_segments(d)
+        if isinstance(seg, tuple):
+            n = max(n, len(seg[1]))
+    return max(n, 2)
+
+
+def hazard_segment_count(params: Params) -> int:
+    """The empirical failure program's static segment count (else 0).
+
+    This is the ONLY static compile key the empirical family adds: the
+    edges and rates themselves are traced columns, so a sweep over
+    hazards fitted from different log slices shares one program as long
+    as the (padded) segment counts agree.
+    """
+    if hazard_kind(params) != "empirical":
+        return 0
+    return _padded_pair_count(
+        _build_distribution(params, params.random_failure_rate),
+        _build_distribution(params, params.systematic_failure_rate))
+
+
+def repair_segment_count(params: Params) -> int:
+    """The empirical repair program's static segment count (else 0)."""
+    if repair_kind(params) != "empirical":
+        return 0
+    auto, man = _build_repair_distributions(params)
+    return _padded_pair_count(auto, man)
+
+
+def _pair_segment_columns(d_a, d_b, m: int) -> np.ndarray:
+    """``[a_edges (m-1), a_rates (m), b_edges (m-1), b_rates (m)]``.
+
+    Disabled clocks become all-zero rates over synthetic edges (zero
+    hazard never fires); shorter fits pad by repeating the terminal
+    rate, which leaves the hazard function unchanged.
+    """
+    blocks = []
+    for d in (d_a, d_b):
+        seg = _clock_segments(d)
+        if isinstance(seg, tuple):
+            e, r = pad_segments(seg[0], seg[1], m)
+        else:
+            e, r = np.arange(1.0, m), np.zeros(m)
+        blocks.extend([e, r])
+    return np.concatenate(blocks).astype(np.float32)
 
 
 def _weibull_clock_coeff(w: Weibull) -> float:
@@ -296,12 +465,18 @@ def _lognormal_peak_hazard(scale: float, sigma: float) -> float:
 def hazard_columns(params: Params) -> np.ndarray:
     """Per-point failure-hazard parameter columns (traced inputs).
 
-    Shape ``(N_HAZARD_COLS,)`` float32; see the column legend on
-    :data:`N_HAZARD_COLS`.  Values are read off the same distribution
-    objects the event engine samples from, never from re-stated kwarg
-    defaults.
+    Shape ``(hazard_col_count(kind, n_segments),)`` float32 — the fixed
+    :data:`N_HAZARD_COLS` layout for the closed-form families, the
+    segment-count-dependent empirical layout otherwise.  Values are
+    read off the same distribution objects the event engine samples
+    from, never from re-stated kwarg defaults.
     """
     kind = hazard_kind(params)
+    if kind == "empirical":
+        return _pair_segment_columns(
+            _build_distribution(params, params.random_failure_rate),
+            _build_distribution(params, params.systematic_failure_rate),
+            hazard_segment_count(params))
     cols = np.zeros(N_HAZARD_COLS, np.float32)
     if kind == "weibull":
         w_rand = _build_distribution(params, params.random_failure_rate)
@@ -343,6 +518,8 @@ def repair_columns(params: Params) -> np.ndarray:
     if kind in (None, "exponential"):
         return cols
     auto, man = _build_repair_distributions(params)
+    if kind == "empirical":
+        return _pair_segment_columns(auto, man, repair_segment_count(params))
     if kind == "weibull":
         cols[0], cols[1], cols[2] = auto.lam, man.lam, auto.k
     elif kind == "lognormal":
@@ -370,6 +547,9 @@ def effective_event_rate(params: Params) -> float:
       consume scan steps, and candidates arrive at up to the majorant
       rate; the peak hazard ``h(t_mode)`` bounds the majorant, so the
       budget uses the fleet-summed peak hazard (an upper bound again).
+    * empirical — same majorant-rate argument with an exact bound: the
+      majorant never exceeds the largest segment rate, so the budget
+      uses the fleet-summed *peak segment rate* per clock.
     * exponential — the paper's ``expected_failures_per_minute``.
     """
     kind = hazard_kind(params)
@@ -391,6 +571,12 @@ def effective_event_rate(params: Params) -> float:
         h_rand = _lognormal_peak_hazard(float(cols[0]), sigma)
         h_sys = _lognormal_peak_hazard(float(cols[1]), sigma)
         return params.job_size * h_rand + n_bad * h_sys
+    if kind == "empirical":
+        cols = hazard_columns(params)
+        m = hazard_segment_count(params)
+        peak_rand = float(cols[m - 1:2 * m - 1].max())
+        peak_sys = float(cols[3 * m - 2:].max())
+        return params.job_size * peak_rand + n_bad * peak_sys
     return lam
 
 
@@ -400,9 +586,22 @@ def phantom_steps(params: Params) -> int:
     The thinning families (bathtub, lognormal) fire a window-expiry
     phantom at most every ``W`` compute minutes; rejected candidates
     are already covered by :func:`effective_event_rate`'s majorant-rate
-    estimate.  Weibull inversion is phantom-free.
+    estimate.  The empirical family's only phantoms are segment-edge
+    re-anchors: each compute phase crosses each edge below its length
+    at most once per clock, so the budget is (edges below the horizon)
+    × (nominal phase count) — an over-count, which is the safe
+    direction.  Weibull inversion is phantom-free.
     """
-    if hazard_kind(params) not in ("bathtub", "lognormal"):
+    kind = hazard_kind(params)
+    if kind == "empirical":
+        cols = hazard_columns(params)
+        m = hazard_segment_count(params)
+        edges = np.concatenate([cols[:m - 1], cols[2 * m - 1:3 * m - 3]])
+        n_edges = int((edges < params.job_length).sum())
+        phases = 1 + int(params.expected_failures_per_minute()
+                         * params.job_length)
+        return n_edges * phases
+    if kind not in ("bathtub", "lognormal"):
         return 0
     cols = hazard_columns(params)
     window = float(cols[4])
@@ -432,10 +631,12 @@ def expected_repair_occupancy(params: Params) -> float:
     (2x the occupancy plus 8 sigma — see
     :func:`repro.core.vectorized._repair_slots_for`), and a genuinely
     undersized lane is surfaced, not silent (``n_repair_overflow`` +
-    RuntimeWarning).  Weibull/bathtub keep the age-zero-ish estimate,
+    RuntimeWarning).  The empirical family budgets with its peak
+    segment rate for the same reason and gets the same nominal-rate
+    treatment here.  Weibull/bathtub keep the age-zero-ish estimate,
     which for them upper-bounds the accepted-failure rate.
     """
-    if hazard_kind(params) == "lognormal":
+    if hazard_kind(params) in ("lognormal", "empirical"):
         rate = params.expected_failures_per_minute()
     else:
         rate = effective_event_rate(params)
@@ -511,6 +712,97 @@ def lognormal_window_majorant(age, window, scale, sigma, mode_rel):
     """
     t_star = jnp.clip(scale * mode_rel, age, age + window)
     return lognormal_hazard(t_star, scale, sigma)
+
+
+def _segment_take(values, idx):
+    """``values[..., m]`` gathered at per-replica segment index ``idx``.
+
+    Broadcasts a shared 1-D row across a batched index (the single-point
+    path traces un-batched columns, the sweep path per-replica rows).
+    """
+    values = jnp.asarray(values)
+    idx = jnp.asarray(idx)
+    if values.ndim == idx.ndim + 1:
+        return jnp.take_along_axis(values, idx[..., None], axis=-1)[..., 0]
+    return values[idx]
+
+
+def piecewise_hazard(t, edges, rates):
+    """``h(t)`` for a piecewise-constant hazard (JAX, shape-polymorphic).
+
+    ``edges`` are the ``m - 1`` interior breakpoints (first segment
+    starts at 0, last extends to infinity), ``rates`` the ``m`` segment
+    rates; either may be a shared row or per-replica.
+    """
+    t = jnp.asarray(t)
+    idx = jnp.sum(t[..., None] >= edges, axis=-1)
+    return _segment_take(rates, idx)
+
+
+def piecewise_next_edge(t, edges):
+    """Distance from ``t`` to the nearest edge strictly above it.
+
+    +inf past the last edge.  This is the thinning window inside which
+    the current segment rate IS the supremum — the empirical family's
+    majorant is exact, so candidates are (up to float wobble at the
+    boundary) always accepted.
+    """
+    t = jnp.asarray(t)
+    gap = jnp.where(edges > t[..., None], edges - t[..., None], jnp.inf)
+    return jnp.min(gap, axis=-1)
+
+
+def piecewise_window_majorant(age, window, edges, rates):
+    """``sup h`` over ``[age, age + window)`` — max intersecting rate.
+
+    Exact for every window (each segment's supremum is its own rate);
+    with ``window = piecewise_next_edge(age, edges)`` it reduces to the
+    current rate.  The window end is exclusive so a window that lands
+    exactly on the next edge does not drag in the next segment's rate.
+    """
+    age = jnp.asarray(age)
+    e = jnp.asarray(edges)
+    b = age + window
+    lo = jnp.concatenate([jnp.zeros_like(e[..., :1]), e], axis=-1)
+    hi = jnp.concatenate([e, jnp.full_like(e[..., :1], jnp.inf)], axis=-1)
+    mask = (lo < b[..., None]) & (hi > age[..., None])
+    return jnp.max(jnp.where(mask, rates, 0.0), axis=-1)
+
+
+def piecewise_conditional_residual(age, edges, rates, exp_draw):
+    """Exact time-to-event from ``age`` given survival (segment inversion).
+
+    Solves ``H(age + s) - H(age) = E`` in closed form: locate the
+    segment where the cumulative hazard crosses the target, then invert
+    linearly inside it.  Returns +inf when the total hazard is
+    exhausted first (a zero-rate tail — not fast-path eligible for
+    fitted hazards, but the math stays well-defined for padding and
+    disabled clocks).
+    """
+    age = jnp.asarray(age)
+    e = jnp.asarray(edges)
+    r = jnp.asarray(rates)
+    zero = jnp.zeros_like(e[..., :1])
+    lo = jnp.concatenate([zero, e], axis=-1)
+    hi = jnp.concatenate([e, jnp.full_like(e[..., :1], jnp.inf)], axis=-1)
+    width = hi - lo
+    seg_h = jnp.where(r > 0.0, r * width, 0.0)       # keeps 0 * inf at 0
+    cs = jnp.cumsum(seg_h, axis=-1)
+    c_prev = jnp.concatenate([jnp.zeros_like(cs[..., :1]), cs[..., :-1]],
+                             axis=-1)
+    h_age = jnp.sum(
+        jnp.broadcast_to(r, c_prev.shape)
+        * jnp.clip(age[..., None] - lo, 0.0, width), axis=-1)
+    target = h_age + exp_draw
+    idx = jnp.sum(cs <= target[..., None], axis=-1)
+    m = r.shape[-1]
+    idx_c = jnp.clip(idx, 0, m - 1)
+    r_j = _segment_take(jnp.broadcast_to(r, c_prev.shape), idx_c)
+    lo_j = _segment_take(lo, idx_c)
+    cp_j = _segment_take(c_prev, idx_c)
+    t_star = lo_j + (target - cp_j) / jnp.maximum(r_j, 1e-30)
+    s = jnp.maximum(t_star - age, 0.0)
+    return jnp.where(idx >= m, jnp.inf, s)
 
 
 # ---------------------------------------------------------------------------
@@ -625,12 +917,38 @@ class DeterministicSampler(HazardSampler):
         return scale * jnp.ones_like(u)
 
 
+class PiecewiseConstantSampler(HazardSampler):
+    kind = "empirical"
+    #: failure-race cols = (edges, rates) arrays for ONE clock; the race
+    #: thins the random and systematic clocks separately (exact, since
+    #: thinning independent inhomogeneous Poisson processes is).  The
+    #: repair race passes stage-selected (edges, rates) positionally
+    #: through the ``quantile(u, scale, shape)`` slots.
+
+    def hazard(self, t, cols):
+        edges, rates = cols
+        return piecewise_hazard(t, edges, rates)
+
+    def majorant(self, age, window, cols):
+        edges, rates = cols
+        return piecewise_window_majorant(age, window, edges, rates)
+
+    def conditional_residual(self, age, edges, rates, exp_draw):
+        return piecewise_conditional_residual(age, edges, rates, exp_draw)
+
+    def quantile(self, u, edges, rates):
+        # closed form per segment: invert H(t) = -log1p(-u) from age 0
+        return piecewise_conditional_residual(
+            jnp.zeros_like(u), edges, rates, -jnp.log1p(-u))
+
+
 #: failure families with fast-path sampling machinery (exponential is
 #: the legacy rate-race program and needs none of it)
 FAILURE_SAMPLERS = {
     "weibull": WeibullSampler(),
     "bathtub": BathtubSampler(),
     "lognormal": LognormalSampler(),
+    "empirical": PiecewiseConstantSampler(),
 }
 
 #: repair families the slot lane can sample at entry
@@ -638,4 +956,5 @@ REPAIR_SAMPLERS = {
     "weibull": WeibullSampler(),
     "lognormal": LognormalSampler(),
     "deterministic": DeterministicSampler(),
+    "empirical": PiecewiseConstantSampler(),
 }

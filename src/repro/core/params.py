@@ -47,6 +47,18 @@ class Params:
     ...               distribution_kwargs={"infant_factor": 20.0})
     >>> bath.validate()
 
+    Trace-driven hazards fitted from real failure logs ride the same
+    switch: the ``empirical`` family takes piecewise-constant segment
+    ``edges``/``rates`` (typically a :class:`repro.core.empirical.
+    PiecewiseFit`'s ``distribution_kwargs``) defining the hazard
+    *shape*, rescaled so its mean matches the configured rate — pass
+    ``random_failure_rate=fit.rate`` to reproduce a fit verbatim:
+
+    >>> emp = Params(failure_distribution="empirical",
+    ...              distribution_kwargs={"edges": [120.0],
+    ...                                   "rates": [2.0, 0.5]})
+    >>> emp.validate()
+
     Round trips for experiment files:
 
     >>> Params.from_dict(p.to_dict()) == p

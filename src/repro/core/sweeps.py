@@ -23,8 +23,11 @@ static compile switches (one batch per combination), but their
 *parameters* stay traced — a repair-policy grid over
 ``auto_repair_time`` / ``manual_repair_time`` under Weibull or
 lognormal repairs compiles exactly one program, like any rate grid.
-See the backend module docstring for the exactness caveats of each
-engine.
+For the trace-driven ``empirical`` family the static switch includes
+only the segment *count*: edge positions and segment rates are traced
+columns, so a grid of hazards fitted from different log slices (same
+bin count) batches into one program too.  See the backend module
+docstring for the exactness caveats of each engine.
 
 Special virtual parameter ``systematic_failure_rate_multiplier`` sets the
 systematic rate as a multiple of the (possibly swept) random rate, the way

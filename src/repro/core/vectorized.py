@@ -165,6 +165,65 @@ _METRICS = ("total_time", "n_failures", "n_random_failures",
             "n_campaign_events")
 
 
+def unsupported_reasons(params: Params) -> list:
+    """Why these params are outside the CTMC envelope (empty = inside).
+
+    The single source of truth for :func:`supports` and for the
+    ``engine="ctmc"`` refusal message in :mod:`repro.core.backend` —
+    hand-maintained reason lists there went stale (PR 6 routed the
+    fault-domain x non-exponential-repair combination to the event
+    engine but the message never learned it), so the message is now
+    *built* from this list.
+
+    >>> from repro.core import Params
+    >>> unsupported_reasons(Params())
+    []
+    >>> unsupported_reasons(Params(failure_distribution="deterministic"))
+    ['failure distribution has no fast-path hazard family (closed-form \
+exponential/weibull/bathtub/lognormal, an empirical fit, or a \
+registered distribution with valid hazard_segments())']
+    >>> from repro.core.faultdomains import FaultTopology
+    >>> topo = FaultTopology(n_racks=8, rack_shock_rate=1e-5)
+    >>> unsupported_reasons(Params(fault_domains=topo,
+    ...                            repair_distribution="weibull"))
+    ['fault domains / campaigns require exponential repairs on the \
+fast path (a struck in-shop server would need a per-slot redraw)']
+    """
+    reasons = []
+    if hazards.hazard_kind(params) is None:
+        reasons.append(
+            "failure distribution has no fast-path hazard family "
+            "(closed-form exponential/weibull/bathtub/lognormal, an "
+            "empirical fit, or a registered distribution with valid "
+            "hazard_segments())")
+    if hazards.repair_kind(params) is None:
+        reasons.append(
+            "repair distribution has no fast-path repair family "
+            "(exponential/weibull/lognormal/deterministic, an empirical "
+            "fit, or a registered distribution with valid "
+            "hazard_segments())")
+    if ((params.fault_domains is not None or params.campaign is not None)
+            and hazards.repair_kind(params) != "exponential"):
+        reasons.append(
+            "fault domains / campaigns require exponential repairs on "
+            "the fast path (a struck in-shop server would need a "
+            "per-slot redraw)")
+    if params.repair_servers != 0:
+        reasons.append(
+            "finite repair-shop capacity (repair_servers > 0) — the "
+            "multi-job CTMC engine models it; the single-job program "
+            "has no queue compartment")
+    if params.retirement_threshold != 0:
+        reasons.append("retirement policies are event-engine-only")
+    if params.bad_set_regeneration_period != 0:
+        reasons.append("bad-set regeneration is event-engine-only")
+    if params.checkpoint_interval != 0:
+        reasons.append("checkpoint rollback is event-engine-only")
+    if params.standbys_can_fail:
+        reasons.append("failing warm standbys are event-engine-only")
+    return reasons
+
+
 def supports(params: Params) -> bool:
     """Can the CTMC engine simulate these params exactly?
 
@@ -173,8 +232,9 @@ def supports(params: Params) -> bool:
     path via conditional inversion / hazard thinning) combined with
     exponential / Weibull / lognormal / deterministic repair
     distributions (sampled at shop entry via inverse CDF through the
-    repair-slot lane) — see :mod:`repro.core.hazards`.  The
-    event-engine-only extensions (retirement, bad-set regeneration,
+    repair-slot lane), plus trace-driven ``empirical`` piecewise-
+    constant hazards on both sides — see :mod:`repro.core.hazards`.
+    The event-engine-only extensions (retirement, bad-set regeneration,
     checkpoint rollback, failing standbys) must be off.
     ``engine="auto"`` falls back to the event engine whenever this
     returns False.
@@ -189,6 +249,10 @@ def supports(params: Params) -> bool:
     True
     >>> supports(Params(repair_distribution="weibull",
     ...                 distribution_kwargs={"k": 0.7}))      # slow repairs
+    True
+    >>> supports(Params(failure_distribution="empirical",     # trace-driven
+    ...                 distribution_kwargs={"edges": [24.0, 120.0],
+    ...                                      "rates": [3.0, 1.0, 0.4]}))
     True
     >>> supports(Params(failure_distribution="deterministic"))  # event engine
     False
@@ -217,16 +281,7 @@ def supports(params: Params) -> bool:
     >>> supports(Params(fault_domains=topo, repair_distribution="weibull"))
     False
     """
-    scenario_ok = ((params.fault_domains is None and params.campaign is None)
-                   or hazards.repair_kind(params) == "exponential")
-    return (hazards.hazard_kind(params) is not None
-            and hazards.repair_kind(params) is not None
-            and scenario_ok
-            and params.repair_servers == 0
-            and params.retirement_threshold == 0
-            and params.bad_set_regeneration_period == 0
-            and params.checkpoint_interval == 0
-            and not params.standbys_can_fail)
+    return not unsupported_reasons(params)
 
 
 # ---------------------------------------------------------------------------
@@ -483,27 +538,36 @@ def _step(s: Dict[str, jnp.ndarray], key_t: jax.Array, pv: jnp.ndarray,
           impl: Optional[str], kind: str = "exponential",
           rkind: str = "exponential",
           hist_channels: tuple = HIST_CHANNELS,
-          scen=None) -> Dict[str, jnp.ndarray]:
+          scen=None, n_seg: int = 0,
+          n_rseg: int = 0) -> Dict[str, jnp.ndarray]:
     R = s["t"].shape[0]
     u = jax.random.uniform(key_t, (R, _n_uniforms(kind, rkind)),
                            dtype=jnp.float32, minval=1e-12, maxval=1.0)
-    return _step_u(s, u, pv, impl, kind, rkind, hist_channels, scen)
+    return _step_u(s, u, pv, impl, kind, rkind, hist_channels, scen,
+                   n_seg, n_rseg)
 
 
 def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
             impl: Optional[str], kind: str = "exponential",
             rkind: str = "exponential",
             hist_channels: tuple = HIST_CHANNELS,
-            scen=None) -> Dict[str, jnp.ndarray]:
+            scen=None, n_seg: int = 0,
+            n_rseg: int = 0) -> Dict[str, jnp.ndarray]:
     """One CTMC transition for a batch of replicas.
 
     ``pv`` is either a single parameter vector shared by the whole batch
     or a (B, n_cols) matrix with one parameter row per replica — the
     layout the batched sweep uses after flattening the (points x
     replicas) grid.  Columns 0..14 are the base model parameters;
-    columns 15..19 are the failure-hazard columns and 20..22 the repair
-    columns, whose interpretations the *static* ``kind`` / ``rkind``
-    select (see :mod:`repro.core.hazards`).
+    the next ``hazards.hazard_col_count(kind, n_seg)`` columns are the
+    failure-hazard block and the ``hazards.repair_col_count(rkind,
+    n_rseg)`` after that the repair block, whose interpretations the
+    *static* ``kind`` / ``rkind`` select (see :mod:`repro.core.hazards`).
+    The closed-form families use the fixed 5 + 3 layout; the empirical
+    family's blocks are ``[edges_a, rates_a, edges_b, rates_b]`` with
+    the *static* segment counts ``n_seg`` / ``n_rseg`` sizing them —
+    edge positions and rates stay traced, so a grid over fitted hazards
+    from different log slices shares one compiled program.
 
     ``hist_channels`` is the static tuple of histogram channels the scan
     state carries (must match ``s["hist"].shape[1]``).
@@ -515,18 +579,47 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     Scenarios only reach this path with exponential repairs
     (``supports``), so ``scen`` and the repair-slot lane never co-exist.
     """
-    n_cols = 15 + hazards.N_HAZARD_COLS + hazards.N_REPAIR_COLS
+    n_hc = hazards.hazard_col_count(kind, n_seg)
+    n_rc = hazards.repair_col_count(rkind, n_rseg)
+    n_cols = 15 + n_hc + n_rc
     if pv.ndim == 1:
-        cols = [pv[i] for i in range(n_cols)]
+        cols = [pv[i] for i in range(15)]
         _c = lambda x: x            # param vs (B, 4) class arrays
     else:
-        cols = [pv[:, i] for i in range(n_cols)]
+        cols = [pv[:, i] for i in range(15)]
         _c = lambda x: x[:, None]
     (r_rand, r_sys, recovery, host_sel, waiting, auto_t, man_t,
      auto_fail, man_fail, p_auto, dp, du, ckpt, preempt_cost,
-     warm_standbys) = cols[:15]
-    hz = cols[15:15 + hazards.N_HAZARD_COLS]
-    rz = cols[15 + hazards.N_HAZARD_COLS:]
+     warm_standbys) = cols
+
+    def _vcol(lo, n):
+        # contiguous column block (shared row or per-replica matrix);
+        # the empirical segment arrays stay 1-/2-D instead of joining
+        # the scalar unpack above
+        return pv[lo:lo + n] if pv.ndim == 1 else pv[:, lo:lo + n]
+
+    if kind == "empirical":
+        # [rand edges (m-1), rand rates (m), sys edges (m-1), sys rates
+        # (m)] — per-clock piecewise-constant hazards (hazard_columns)
+        e_re = _vcol(15, n_seg - 1)
+        e_rr = _vcol(15 + n_seg - 1, n_seg)
+        e_se = _vcol(15 + 2 * n_seg - 1, n_seg - 1)
+        e_sr = _vcol(15 + 3 * n_seg - 2, n_seg)
+        hz = None
+    else:
+        hz = [pv[i] if pv.ndim == 1 else pv[:, i]
+              for i in range(15, 15 + n_hc)]
+    if rkind == "empirical":
+        # [auto edges, auto rates, manual edges, manual rates] — stage
+        # selection happens at slot entry below (repair_columns)
+        r_ae = _vcol(15 + n_hc, n_rseg - 1)
+        r_ar = _vcol(15 + n_hc + n_rseg - 1, n_rseg)
+        r_me = _vcol(15 + n_hc + 2 * n_rseg - 1, n_rseg - 1)
+        r_mr = _vcol(15 + n_hc + 3 * n_rseg - 2, n_rseg)
+        rz = None
+    else:
+        rz = [pv[i] if pv.ndim == 1 else pv[:, i]
+              for i in range(15 + n_hc, n_cols)]
 
     if scen is not None:
         # scenario columns: [rates (D), fractions (D), times (L),
@@ -622,6 +715,25 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         win_eff = jnp.where(l_win > 0, l_win, jnp.inf)
         haz_resid = jnp.where(computing, win_eff * jnp.ones_like(age32),
                               jnp.inf)
+    elif kind == "empirical":
+        # Ogata thinning with the *exact* majorant: the window runs to
+        # the nearest segment edge of either clock, over which both
+        # hazards are constant — so the majorant is the current segment
+        # rate and every in-window candidate is accepted (the accept
+        # step below only guards fp edge crossings).  Phantom steps
+        # occur only when a window-expiry timer re-anchors the race at
+        # a segment boundary.  Random and systematic clocks carry their
+        # own (edges, rates) columns and thin independently (exact for
+        # two independent NHPPs).
+        pe = hazards.FAILURE_SAMPLERS["empirical"]
+        hbar_r = pe.hazard(age32, (e_re, e_rr))                     # (B,)
+        hbar_s = pe.hazard(age32, (e_se, e_sr))
+        fail_rand = run * hbar_r[:, None] * computing[:, None]
+        fail_sys = run * bad_mask[None, :] * hbar_s[:, None] \
+            * computing[:, None]
+        win = jnp.minimum(hazards.piecewise_next_edge(age32, e_re),
+                          hazards.piecewise_next_edge(age32, e_se))
+        haz_resid = jnp.where(computing, win, jnp.inf)
     else:
         fail_rand = run * _c(r_rand) * computing[:, None]
         fail_sys = run * bad_mask[None, :] * _c(r_sys) * computing[:, None]
@@ -731,6 +843,20 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         h_at = jnp.where(cand_sys, h_s, h_r)
         h_bar = jnp.where(cand_sys, hbar_s, hbar_r)
         accept = u_haz * h_bar < h_at
+        is_fail = is_fail & accept
+        is_sys = is_sys & accept
+    elif kind == "empirical":
+        # inside the window the hazard equals the majorant, so this
+        # accepts (u < 1 always); it only bites when fp rounding lands
+        # age + dt across a segment edge, where comparing against the
+        # *new* segment's rate keeps the thinned process exact
+        pe = hazards.FAILURE_SAMPLERS["empirical"]
+        h_r = pe.hazard(age32 + dt, (e_re, e_rr))
+        h_s = pe.hazard(age32 + dt, (e_se, e_sr))
+        cand_sys = (ev >= 4) & (ev < 8)
+        h_at = jnp.where(cand_sys, h_s, h_r)
+        h_bar = jnp.where(cand_sys, hbar_s, hbar_r)
+        accept = u_haz * h_bar <= h_at
         is_fail = is_fail & accept
         is_sys = is_sys & accept
     if rkind == "exponential":
@@ -1100,8 +1226,23 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         # entry and escalation are mutually exclusive, so one quantile
         # evaluation with the stage-selected scale column serves both
         # (a second ndtri/pow per step is pure waste in the hot scan)
-        q_dur = rsampler.quantile(
-            u_dur, jnp.where(escalate, rz[1], rz[0]), rz[2]).astype(adt)
+        if rkind == "empirical":
+            # stage-select whole (edges, rates) blocks, then one
+            # segment-inversion quantile; broadcast shared rows to the
+            # batch so jnp.where can mix stages per replica
+            B = run.shape[0]
+
+            def _brow(x):
+                return x if x.ndim == 2 else jnp.broadcast_to(
+                    x, (B,) + x.shape)
+
+            esc2 = escalate[:, None]
+            q_dur = rsampler.quantile(
+                u_dur, jnp.where(esc2, _brow(r_me), _brow(r_ae)),
+                jnp.where(esc2, _brow(r_mr), _brow(r_ar))).astype(adt)
+        else:
+            q_dur = rsampler.quantile(
+                u_dur, jnp.where(escalate, rz[1], rz[0]), rz[2]).astype(adt)
         idx = jnp.where(is_rep, won_slot, fslot)
         cur_rem = rem[srows, idx]
         cur_stage = s["repair_stage"][srows, idx]
@@ -1224,12 +1365,14 @@ def _struct_key(p: Params):
 
 @partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "impl",
                                    "early_exit", "struct_key", "kind",
-                                   "rkind", "hist_channels", "scen"))
+                                   "rkind", "hist_channels", "scen",
+                                   "n_seg", "n_rseg"))
 def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
                  chunk: int, n_chunks, rem: int, impl: Optional[str],
                  early_exit: bool, struct_key, kind: str, rkind: str,
                  hist_channels: tuple, scen,
-                 init_state: Dict[str, jnp.ndarray]):
+                 init_state: Dict[str, jnp.ndarray],
+                 n_seg: int = 0, n_rseg: int = 0):
     """Chunked scan with early exit; batch axis is B = P * R (point-major).
 
     Runs exactly ``n_chunks * chunk + rem`` steps (minus chunks skipped
@@ -1249,7 +1392,7 @@ def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
         if P > 1:
             u = jnp.tile(u, (P, 1))
         return _step_u(state, u, pv, impl, kind, rkind, hist_channels,
-                       scen), None
+                       scen, n_seg, n_rseg), None
 
     def run_chunk(state, i, n_steps):
         # one batched threefry call per chunk (a per-step split + draw is
@@ -1308,14 +1451,13 @@ def compile_cache_size() -> Optional[int]:
     return fn() if callable(fn) else None
 
 
-def _unsupported_error() -> ValueError:
+def _unsupported_error(params: Params) -> ValueError:
+    reasons = unsupported_reasons(params) \
+        or ["unknown reason — please report"]
     return ValueError(
-        "CTMC engine supports exponential/weibull/bathtub/lognormal "
-        "failure processes with exponential/weibull/lognormal/"
-        "deterministic repairs (no retirement / regeneration / "
-        "checkpoint rollback / failing standbys / user-registered "
-        "distribution families; fault domains / campaigns require "
-        "exponential repairs here); use core.simulation.simulate instead")
+        "these Params are outside the CTMC envelope: "
+        + "; ".join(reasons)
+        + "; use core.simulation.simulate (or engine='auto') instead")
 
 
 #: non-_METRICS outputs worth returning: completion flag + the exact
@@ -1367,7 +1509,7 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
     run-duration percentiles degrade to pooling per-replica means.
     """
     if not supports(params):
-        raise _unsupported_error()
+        raise _unsupported_error(params)
     params.validate()
     max_steps = max_steps or default_max_steps(params)
     chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, max_steps)
@@ -1378,7 +1520,9 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
                        max_steps % chunk, impl, early_exit,
                        _struct_key(params), hazards.hazard_kind(params),
                        hazards.repair_kind(params), channels,
-                       faultdomains.scenario_key(params), init_state)
+                       faultdomains.scenario_key(params), init_state,
+                       hazards.hazard_segment_count(params),
+                       hazards.repair_segment_count(params))
     return _extract(out, channels=channels)
 
 
@@ -1434,7 +1578,7 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
     params_list = list(params_list)
     for p in params_list:
         if not supports(p):
-            raise _unsupported_error()
+            raise _unsupported_error(p)
         p.validate()
     if not params_list:
         return []
@@ -1465,8 +1609,14 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         # and the trailing parameter columns, so it splits groups the
         # same way the hazard family does; shock *rates* and campaign
         # *times/fractions* stay traced — a shock-rate grid over one
-        # topology compiles exactly once
+        # topology compiles exactly once.  Likewise the empirical
+        # family's segment *counts* (they size the column blocks) are
+        # part of the key while edge positions and rates stay traced —
+        # a grid of hazards fitted from different log slices is one
+        # program as long as the fits share a bin count.
         gkey = (kind, rkind, p.age_dtype, faultdomains.scenario_key(p),
+                hazards.hazard_segment_count(p),
+                hazards.repair_segment_count(p),
                 None if padded else _struct_key(p))
         groups.setdefault(gkey, []).append(i)
     mr = _max_runs_for(params_list) if max_runs is None else max_runs
@@ -1474,7 +1624,8 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
     bucket = padded and bucketed
     channels = _hist_channels(params_list)
     results: list = [None] * len(params_list)
-    for (kind, rkind, _adt, scen, skey), idxs in groups.items():
+    for (kind, rkind, _adt, scen, n_seg, n_rseg, skey), idxs in \
+            groups.items():
         pts = [params_list[i] for i in idxs]
         P, R = len(pts), n_replicas
         steps = max_steps or max(default_max_steps(p) for p in pts)
@@ -1503,7 +1654,7 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P_run, R_run,
                            chunk, jnp.int32(steps // chunk), steps % chunk,
                            impl, early_exit, skey, kind, rkind, channels,
-                           scen, init_state)
+                           scen, init_state, n_seg, n_rseg)
         for j, i in enumerate(idxs):
             rows = (slice(j * R_run, j * R_run + R) if R_run == R
                     else np.arange(R) + j * R_run)

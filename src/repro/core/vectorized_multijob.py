@@ -102,6 +102,46 @@ _N_UNIFORMS = 10
 _PHI = 0.6180339887498949
 
 
+def unsupported_reasons_multijob(cluster: Params,
+                                 jobs: Sequence[JobSpec]) -> list:
+    """Why this cluster is outside the multi-job CTMC envelope.
+
+    Empty list = inside.  The single source of truth for
+    :func:`supports_multijob` and the ``engine="ctmc"`` refusal
+    message built by :mod:`repro.core.backend` — mirroring
+    ``vectorized.unsupported_reasons`` so the messages can never go
+    stale against the actual dispatch conditions again.
+    """
+    reasons = []
+    if len(jobs) < 1:
+        reasons.append("no jobs given")
+    if hazards.hazard_kind(cluster) != "exponential":
+        reasons.append(
+            "non-exponential failure distribution (the multi-job "
+            "program has no per-job hazard lanes yet; the single-job "
+            "CTMC engine covers weibull/bathtub/lognormal/empirical)")
+    if hazards.repair_kind(cluster) != "exponential":
+        reasons.append(
+            "non-exponential repair distribution (the shared "
+            "repair-shop lane is exponential-stage only)")
+    if cluster.fault_domains is not None or cluster.campaign is not None:
+        reasons.append(
+            "fault domains / campaigns are single-job-fast-path or "
+            "event-engine territory here")
+    if cluster.retirement_threshold != 0:
+        reasons.append("retirement policies are event-engine-only")
+    if cluster.bad_set_regeneration_period != 0:
+        reasons.append("bad-set regeneration is event-engine-only")
+    if cluster.checkpoint_interval != 0:
+        reasons.append("checkpoint rollback is event-engine-only")
+    if cluster.standbys_can_fail:
+        reasons.append("failing warm standbys are event-engine-only")
+    if any(j.start_time != 0.0 for j in jobs):
+        reasons.append(
+            "staggered job start times (all jobs must start at t=0)")
+    return reasons
+
+
 def supports_multijob(cluster: Params, jobs: Sequence[JobSpec]) -> bool:
     """Can the multi-job CTMC engine run this cluster exactly-in-law?
 
@@ -112,16 +152,7 @@ def supports_multijob(cluster: Params, jobs: Sequence[JobSpec]) -> bool:
     domains/campaigns, and the event-engine-only extensions stay on the
     event-loop oracle, as do staggered job start times.
     """
-    return (len(jobs) >= 1
-            and hazards.hazard_kind(cluster) == "exponential"
-            and hazards.repair_kind(cluster) == "exponential"
-            and cluster.fault_domains is None
-            and cluster.campaign is None
-            and cluster.retirement_threshold == 0
-            and cluster.bad_set_regeneration_period == 0
-            and cluster.checkpoint_interval == 0
-            and not cluster.standbys_can_fail
-            and all(j.start_time == 0.0 for j in jobs))
+    return not unsupported_reasons_multijob(cluster, jobs)
 
 
 # ---------------------------------------------------------------------------
@@ -677,12 +708,14 @@ def compile_cache_size() -> Optional[int]:
     return fn() if callable(fn) else None
 
 
-def _unsupported_error() -> ValueError:
+def _unsupported_error(cluster: Params, jobs) -> ValueError:
+    reasons = unsupported_reasons_multijob(cluster, jobs) \
+        or ["unknown reason — please report"]
     return ValueError(
-        "multi-job CTMC engine supports exponential failures and repairs "
-        "with all jobs starting at t=0 (no fault domains / campaigns / "
-        "retirement / regeneration / checkpoint rollback / failing "
-        "standbys); use core.multijob.simulate_multijob instead")
+        "this multi-job cluster is outside the CTMC envelope: "
+        + "; ".join(reasons)
+        + "; use core.multijob.simulate_multijob (or engine='auto') "
+        "instead")
 
 
 def _extract_point(state, rows, J: int, channels: tuple,
@@ -771,7 +804,7 @@ def simulate_multijob_ctmc_sweep(
     points = [(c, tuple(js)) for c, js in points]
     for c, js in points:
         if not supports_multijob(c, js):
-            raise _unsupported_error()
+            raise _unsupported_error(c, js)
         # the cluster-level job fields are unused in multi-job mode;
         # validate through a per-job surrogate (the event engine's
         # Coordinator params are built the same way)
