@@ -413,6 +413,101 @@ def correlated_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
     }
 
 
+def checkpoint_bench_params() -> Params:
+    """The checkpoint-rollback benchmark scenario, shared with the CI
+    quick gate (scripts/check_bench.py) so the gate always measures the
+    same scenario it compares against: a 64-server job whose fleet MTBF
+    (~90 min) sits inside the swept interval grid, so every point pays
+    real rollbacks AND real writes — the regime the goodput knob
+    actually trades in.  Exponential failures keep the event side on its
+    O(1)-per-restart sampler; the gap measured here is the rollback
+    bookkeeping itself."""
+    return Params(job_size=64, working_pool_size=72, spare_pool_size=8,
+                  warm_standbys=4, job_length=1 * MINUTES_PER_DAY,
+                  random_failure_rate=0.25 / MINUTES_PER_DAY,
+                  checkpoint_cost=5.0, seed=0)
+
+
+def checkpoint_sweep_throughput(n_points: int = 8, n_replicas: int = 256,
+                                ) -> Dict[str, object]:
+    """Checkpoint-interval grid on the fast path: rollback vs the event
+    engine.
+
+    Before the rollback lanes landed, ``checkpoint_interval > 0`` was a
+    hard CTMC refusal — every goodput study fell back to one event
+    trajectory at a time, which is exactly the study the optimizer
+    (:mod:`repro.core.optimize`) now runs hundreds of candidates for.
+    Sweeps the interval grid (8 x 256 by default, fleet MTBF inside the
+    grid) through both engines.  Both ``checkpoint_interval`` and
+    ``checkpoint_cost`` are *traced* columns — zero new static compile
+    keys — so the whole grid must compile exactly one XLA program
+    (``sweep_compiles``); the acceptance floor for this entry is a
+    >= 5x warm speedup (scripts/check_bench.py gates both).
+    """
+    from repro.core import vectorized
+
+    base = checkpoint_bench_params().replace(
+        max_run_records=97)   # bench-unique jit shapes
+    values = [float(v) for v in np.linspace(15.0, 120.0, n_points)]
+    c0 = vectorized.compile_cache_size()
+    out = _engine_ab_sweep(base, n_points, n_replicas, "checkpoint-bench",
+                           parameter="checkpoint_interval", values=values)
+    c1 = vectorized.compile_cache_size()
+    return {
+        "checkpoint_cost": base.checkpoint_cost,
+        "sweep_compiles": None if c0 is None else c1 - c0,
+        **out,
+    }
+
+
+def checkpoint_smoke(n_replicas: int = 24) -> Dict[str, object]:
+    """CI guard: a traced (checkpoint_interval x checkpoint_cost) grid
+    must compile exactly one XLA program, and the golden-section
+    optimizer must return an interval inside its own bounds with the
+    advertised evaluation count; exits nonzero otherwise."""
+    from repro.core import run_replications_batch, vectorized
+    from repro.core.optimize import optimize_checkpoint_interval
+
+    base = Params(job_size=16, working_pool_size=32, spare_pool_size=4,
+                  warm_standbys=2, job_length=0.2 * MINUTES_PER_DAY,
+                  random_failure_rate=2.0 / MINUTES_PER_DAY,
+                  recovery_time=5.0, auto_repair_time=30.0,
+                  manual_repair_time=60.0, seed=0, checkpoint_cost=2.0,
+                  max_run_records=17)   # bench-unique jit shapes
+    grid = [base.replace(checkpoint_interval=iv, checkpoint_cost=c)
+            for iv in (0.0, 20.0, 45.0) for c in (0.0, 2.0)]
+    c0 = vectorized.compile_cache_size()
+    run_replications_batch(grid, n_replicas, engine="ctmc")
+    c1 = vectorized.compile_cache_size()
+    compiles = None if c0 is None else c1 - c0
+    res = optimize_checkpoint_interval(
+        base.replace(checkpoint_interval=20.0), n_replicas=16,
+        n_grid=4, refine_iters=2, engine="ctmc")
+    lo, hi = min(res.grid), max(res.grid)
+    out = {"n_points": len(grid), "n_replicas": n_replicas,
+           "compiles": compiles,
+           "optimizer": {"interval": res.interval,
+                         "objective": res.objective,
+                         "young_daly": res.young_daly,
+                         "n_evals": res.n_evals}}
+    if compiles is None:
+        out["note"] = ("jit cache introspection unavailable on this jax; "
+                       "checkpoint-grid guard skipped")
+    elif compiles != 1:
+        raise SystemExit(
+            f"compile-count regression: traced checkpoint grid compiled "
+            f"{compiles} XLA programs, expected exactly 1")
+    if not (lo <= res.interval <= hi):
+        raise SystemExit(
+            f"optimizer regression: interval {res.interval} escaped its "
+            f"search bounds ({lo}, {hi})")
+    if res.n_evals != 4 + 2 * len(res.history):
+        raise SystemExit(
+            f"optimizer regression: {res.n_evals} evaluations for "
+            f"4 grid + {len(res.history)} golden-section iterations")
+    return out
+
+
 def multijob_bench_params(job_length_scale: float = 1.0):
     """The multi-job benchmark scenario, shared with the CI quick gate
     (scripts/check_bench.py) so the gate measures the exact scenario it
@@ -729,7 +824,8 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
         print(json.dumps({"structural": structural_smoke(),
                           "bucketing": bucketing_smoke(),
                           "repair": repair_smoke(),
-                          "multijob": multijob_smoke()}, indent=2))
+                          "multijob": multijob_smoke(),
+                          "checkpoint": checkpoint_smoke()}, indent=2))
         sys.exit(0)
     sw = sweep_throughput()
     sw["structural"] = structural_sweep_throughput()
@@ -739,15 +835,16 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
     sw["empirical"] = empirical_sweep_throughput()
     sw["correlated"] = correlated_sweep_throughput()
     sw["multijob"] = multijob_sweep_throughput()
+    sw["checkpoint"] = checkpoint_sweep_throughput()
     sections = ("points", "structural", "bucketing", "nonexp", "repair_dist",
-                "empirical", "correlated", "multijob")
+                "empirical", "correlated", "multijob", "checkpoint")
     print(json.dumps({k: v for k, v in sw.items() if k not in sections},
                      indent=2))
     print(json.dumps({k: v for k, v in sw["structural"].items()
                       if k != "points"}, indent=2))
     print(json.dumps(sw["bucketing"], indent=2))
     for sec in ("nonexp", "repair_dist", "empirical", "correlated",
-                "multijob"):
+                "multijob", "checkpoint"):
         print(json.dumps({k: v for k, v in sw[sec].items()
                           if k != "points"}, indent=2))
     print("wrote", write_sweep_artifact(sw))

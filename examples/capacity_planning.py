@@ -52,6 +52,10 @@ parser.add_argument("--jobs", choices=("off", "on"), default="on",
                     help="multi-job what-if: spare-pool x repair-server "
                          "grid with three mixed-size jobs sharing one "
                          "pool and one repair shop")
+parser.add_argument("--tune", choices=("off", "on"), default="on",
+                    help="checkpoint what-if: goodput-optimal checkpoint "
+                         "interval via golden-section on the fast path, "
+                         "cross-checked against Young/Daly")
 args = parser.parse_args()
 
 N_REP = 64 if args.fast else 256
@@ -295,3 +299,43 @@ if args.jobs == "on":
           "column — a shop one server short backs up every job at once "
           "(hand-offs go FIFO to the longest-stalled job; see "
           "docs/multijob.md).")
+
+# ---------------------------------------------------------------------------
+# what-if: goodput-optimal checkpoint cadence (docs/optimization.md)
+# ---------------------------------------------------------------------------
+if args.tune == "on":
+    from repro.core import cluster_failure_rate, young_daly_interval
+    from repro.core.optimize import optimize_checkpoint_interval
+
+    # a 10-minute checkpoint write at paper scale: every interval
+    # candidate is a traced column, so the whole search (coarse grid +
+    # every golden-section iteration) reuses ONE compiled XLA program
+    # a one-minute write: at this fleet's ~20-min MTBF a long write
+    # would drown the job in overhead — the knob only has an interior
+    # optimum when C << MTBF, the regime the +-4x bracket stays inside
+    tuned = base.replace(
+        job_length=min(args.job_days, 8.0) * MINUTES_PER_DAY,
+        checkpoint_cost=1.0)
+    n_rep_ck = max(N_REP // 4, 32)
+    mtbf = 1.0 / cluster_failure_rate(tuned)
+    yd = young_daly_interval(tuned.checkpoint_cost, mtbf)
+    print(f"\n=== what-if: checkpoint cadence (write cost "
+          f"{tuned.checkpoint_cost:.0f} min, fleet MTBF {mtbf:.0f} min), "
+          f"golden-section on goodput, {n_rep_ck} reps ===")
+    res = optimize_checkpoint_interval(tuned, n_replicas=n_rep_ck,
+                                       bounds=(yd / 4.0, yd * 4.0),
+                                       n_grid=8, refine_iters=6)
+    print(f"{'interval min':>13} {'goodput':>9}")
+    for iv, g in zip(res.grid, res.grid_objective):
+        mark = " <- grid argmax" if g == max(res.grid_objective) else ""
+        print(f"{iv:>13.1f} {g:>9.4f}{mark}")
+    print(f"\nYoung/Daly sqrt(2*C*MTBF)      : {res.young_daly:8.1f} min")
+    print(f"simulated goodput optimum      : {res.interval:8.1f} min "
+          f"(goodput {res.objective:.4f}, {res.n_evals} candidates, "
+          f"{len(res.history)} refinement iterations)")
+    print("\nThe first-order Young/Daly cadence and the simulated optimum "
+          "agree to about a grid notch here — the analytical cross-check "
+          "that pins the optimizer (tests/test_checkpoint_opt.py).  The "
+          "simulated curve additionally prices what the formula ignores: "
+          "stalls, pool depletion, and host-selection overhead all load "
+          "the denominator of goodput = useful work / wall clock.")

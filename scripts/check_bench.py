@@ -42,6 +42,7 @@ FULL_SPEEDUP_FLOORS = {
     "empirical.speedup_x": 5.0,     # trace-driven hazard grid (acceptance)
     "correlated.speedup_x": 5.0,    # fault-domain scenario grid (acceptance)
     "multijob.speedup_x": 4.0,      # shared-pool capacity grid (acceptance)
+    "checkpoint.speedup_x": 3.0,    # rollback interval grid (acceptance)
 }
 
 #: exact compile-count invariants of the full artifact
@@ -54,6 +55,8 @@ FULL_COMPILE_GATES = {
     "correlated.sweep_compiles": 1,
     # J is the only static key: one program per mixed-size capacity grid
     "multijob.sweep_compiles": 1,
+    # interval and cost are traced columns: one program per interval grid
+    "checkpoint.sweep_compiles": 1,
 }
 
 _FAILURES = []
@@ -189,6 +192,23 @@ def run_quick(baseline: dict, tolerance: float) -> None:
           f"{'MISSING' if b_mj is None else f'{b_mj:.2f}x'} (8x256); "
           f"floor {tolerance:.2f}x of committed")
 
+    # the checkpoint-rollback scenario (shared factory, half job
+    # length): an interval grid through the rollback lanes vs the event
+    # engine's segment loop — catches the traced interval/cost axes
+    # silently knocking the grid back onto the event fallback
+    from benchmarks.engine_perf import checkpoint_bench_params
+
+    kbase = checkpoint_bench_params().replace(
+        job_length=0.5 * MINUTES_PER_DAY, max_run_records=66)
+    q_ck = _quick_ab(kbase, "checkpoint_interval",
+                     [15.0, 45.0, 80.0, 120.0], 64)
+    b_ck = _lookup(baseline, "checkpoint.speedup_x")
+    _gate("quick.checkpoint_speedup",
+          b_ck is not None and q_ck >= tolerance * b_ck,
+          f"measured {q_ck:.2f}x warm (4x64 grid) vs committed "
+          f"{'MISSING' if b_ck is None else f'{b_ck:.2f}x'} (8x256); "
+          f"floor {tolerance:.2f}x of committed")
+
 
 def _quick_multijob_ab(cluster, jobs, n_replicas):
     """Warm multi-job CTMC wall vs the event oracle on a 4-point grid."""
@@ -230,7 +250,7 @@ def run_full(fresh: dict, baseline: dict, rel_tolerance: float) -> None:
         _gate(f"full.{key}", val is None or val == want,
               f"{val} == {want} (None = unmeasurable, tolerated)")
     for sec in ("", "structural.", "nonexp.", "repair_dist.",
-                "empirical.", "correlated.", "multijob."):
+                "empirical.", "correlated.", "multijob.", "checkpoint."):
         key = f"{sec}max_abs_z"
         val = _lookup(fresh, key)
         _gate(f"full.{key}", val is not None and val < 4.0,
@@ -256,6 +276,8 @@ def append_history(fresh: dict, path: str) -> None:
         "correlated_compiles": _lookup(fresh, "correlated.sweep_compiles"),
         "multijob_speedup_x": _lookup(fresh, "multijob.speedup_x"),
         "multijob_compiles": _lookup(fresh, "multijob.sweep_compiles"),
+        "checkpoint_speedup_x": _lookup(fresh, "checkpoint.speedup_x"),
+        "checkpoint_compiles": _lookup(fresh, "checkpoint.sweep_compiles"),
     }
     with open(path, "a") as f:
         f.write(json.dumps(record) + "\n")

@@ -64,13 +64,14 @@ python -m pytest -q -p no:randomly -p no:cacheprovider --doctest-modules \
 python scripts/check_links.py
 
 # ordering-independence check (--lf-safe): the distribution/bucketing/
-# non-exponential/multi-job suites must pass rerun standalone with a
-# cold pytest cache — exactly what a `pytest --lf` retry after a
+# non-exponential/multi-job/checkpoint suites must pass rerun standalone
+# with a cold pytest cache — exactly what a `pytest --lf` retry after a
 # failure would run
 python -m pytest -q -p no:randomly -p no:cacheprovider \
     tests/test_histograms.py tests/test_bucketing.py tests/test_nonexp.py \
     tests/test_repair_dist.py tests/test_faultdomains.py \
-    tests/test_multijob_parity.py tests/test_empirical.py
+    tests/test_multijob_parity.py tests/test_empirical.py \
+    tests/test_checkpoint_opt.py
 
 # trace-driven fitting smoke: synthetic log -> fit_piecewise_hazard ->
 # JSON round trip -> a short CTMC study from the fitted hazard
@@ -80,8 +81,11 @@ python scripts/fit_hazard.py --selftest
 # one XLA program per padded group, two same-bucket sweeps of different
 # (P, R, step-budget) must share exactly one program, a
 # repair-parameter grid under non-exponential repairs must compile
-# once, and a mixed-size multi-job capacity grid must compile once
-# (J is the only static key); exits nonzero on any regression.
+# once, a mixed-size multi-job capacity grid must compile once
+# (J is the only static key), and a traced (checkpoint_interval x
+# checkpoint_cost) grid must compile once — plus a golden-section
+# optimizer micro-run pinning its bounds/eval-count contract; exits
+# nonzero on any regression.
 if [[ -n "${CI_ARTIFACTS_DIR:-}" ]]; then
     python benchmarks/engine_perf.py --smoke \
         | tee "${CI_ARTIFACTS_DIR}/bench_smoke.json"

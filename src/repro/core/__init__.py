@@ -13,6 +13,8 @@ implemented as a composable library:
   * :mod:`metrics`       — RunResult + cross-replication statistics
   * :mod:`sweeps`        — OneWaySweep / TwoWaySweep experiment harness
   * :mod:`analytical`    — closed-form cross-checks + Young/Daly cadence
+  * :mod:`optimize`      — goodput-maximizing knob search (golden-section
+    over checkpoint_interval, coordinate descent over structural knobs)
   * :mod:`vectorized`    — JAX CTMC engine for massive parameter sweeps
   * :mod:`hazards`       — non-exponential hazard math for the fast path
   * :mod:`empirical`     — trace-driven piecewise-constant hazard fitting
@@ -48,6 +50,8 @@ from .faultdomains import (Campaign, CampaignEvent, FaultTopology,
 from .hazards import hazard_kind
 from .histograms import (HIST_CHANNELS, Histogram, HistogramSpec,
                          percentiles_per_row)
+from .optimize import (CheckpointOptResult, KnobOptResult,
+                       optimize_checkpoint_interval, optimize_knobs)
 from .metrics import (RunResult, Stat, aggregate, aggregate_arrays,
                       aggregate_multijob_arrays, histograms_from_arrays,
                       histograms_from_results, pool_histograms, summarize)
@@ -60,8 +64,9 @@ from .vectorized_multijob import (simulate_multijob_ctmc,
                                   supports_multijob)
 
 __all__ = [
-    "Bathtub", "Campaign", "CampaignEvent", "CheckpointPlan",
-    "ClusterSimulation", "Deterministic",
+    "Bathtub", "Campaign", "CampaignEvent", "CheckpointOptResult",
+    "CheckpointPlan",
+    "ClusterSimulation", "Deterministic", "KnobOptResult",
     "Distribution", "Empirical", "Environment", "Event", "Exponential",
     "FaultTopology",
     "HIST_CHANNELS",
@@ -78,6 +83,7 @@ __all__ = [
     "from_mttf_table", "hazard_kind", "histograms_from_arrays",
     "histograms_from_results", "load_experiment", "make_distribution",
     "percentiles_per_row", "pool_histograms",
+    "optimize_checkpoint_interval", "optimize_knobs",
     "paper_table1_defaults", "plan_checkpoints", "register_distribution",
     "repair_shop_occupancy", "resolve_engine", "resolve_engine_multijob",
     "run_multijob_batch", "run_replications",

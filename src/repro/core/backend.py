@@ -11,7 +11,9 @@ AIReSim has two engines with one statistical contract:
     piecewise-constant hazards (fitted from event logs via
     :mod:`repro.core.empirical`), *and* Weibull / lognormal /
     deterministic repair distributions (see ``vectorized.supports`` and
-    docs/distributions.md), simulating thousands of replicas — and, via
+    docs/distributions.md), plus checkpoint rollback + write cost
+    (``checkpoint_interval`` / ``checkpoint_cost``, both traced sweep
+    axes), simulating thousands of replicas — and, via
     :func:`run_replications_batch`, whole sweep grids, including
     *structural* grids over job_size / pool sizes / warm_standbys — as a
     single compiled XLA program per hazard family (structure padding;

@@ -94,18 +94,21 @@ class Coordinator:
                 return others[int(self.rng.integers(len(others)))]
         return failed
 
-    def _bank_progress(self, phase_start: float) -> None:
-        """Credit work done in the ended phase, minus checkpoint rollback."""
+    def _bank_progress(self, compute: float, ckpt_work: float) -> None:
+        """Credit the ended phase's compute, minus checkpoint rollback.
+
+        ``compute`` is the phase's total useful-compute time (the run
+        record, gross of rollback, excluding checkpoint-write wall time);
+        ``ckpt_work`` is the part past the last durable checkpoint, which
+        is what a failure rolls back.  ``checkpoint_interval == 0`` keeps
+        the historical model where nothing is ever lost.
+        """
         p = self.params
-        progress = self.env.now - phase_start
-        lost = 0.0
-        if p.checkpoint_interval > 0:
-            # work past the last completed checkpoint is rolled back
-            lost = math.fmod(progress, p.checkpoint_interval)
+        lost = ckpt_work if p.checkpoint_interval > 0 else 0.0
         self.metrics.lost_work += lost
-        self.remaining_work -= (progress - lost)
-        self.metrics.useful_work += (progress - lost)
-        self.metrics.run_durations.append(progress)
+        self.remaining_work -= (compute - lost)
+        self.metrics.useful_work += (compute - lost)
+        self.metrics.run_durations.append(compute)
 
     # -- the job ------------------------------------------------------------------
     def run_job(self) -> Generator:
@@ -121,7 +124,6 @@ class Coordinator:
             if env.now >= p.max_sim_time:
                 m.timed_out = True
                 break
-            phase_start = env.now
             if p.standbys_can_fail and self.scheduler.standbys:
                 standby_good = [s for s in self.scheduler.standbys if not s.is_bad]
                 standby_bad = [s for s in self.scheduler.standbys if s.is_bad]
@@ -132,15 +134,45 @@ class Coordinator:
                 ttf, failed, is_systematic = self.sampler.sample_first_failure(
                     self.running_good, self.running_bad)
 
-            if ttf >= self.remaining_work:
-                # phase runs to completion
-                yield env.timeout(self.remaining_work)
-                m.run_durations.append(self.remaining_work)
-                m.useful_work += self.remaining_work
-                self.remaining_work = 0.0
+            # ---- checkpoint segment loop ---------------------------------
+            # the phase runs in segments bounded by the next checkpoint
+            # write; the failure clock (``ttf``) is consumed by compute
+            # time only — it is frozen, not restarted, while a paid write
+            # runs.  Tie order matches the CTMC residual race: completion
+            # beats a same-instant write (no final write on a finished
+            # job) and a failure beats a same-instant write.
+            compute = 0.0            # phase compute (the run record)
+            ckpt_work = 0.0          # compute since the last durable write
+            left = self.remaining_work
+            completed = False
+            while True:
+                to_ckpt = (p.checkpoint_interval - ckpt_work
+                           if p.checkpoint_interval > 0 else math.inf)
+                if left <= ttf and left <= to_ckpt:
+                    yield env.timeout(left)
+                    compute += left
+                    m.run_durations.append(compute)
+                    m.useful_work += compute
+                    self.remaining_work = 0.0
+                    completed = True
+                    break
+                if ttf <= to_ckpt:
+                    yield env.timeout(ttf)
+                    compute += ttf
+                    ckpt_work += ttf
+                    break
+                # checkpoint write: the checkpoint is durable from write
+                # start; the write cost is pure wall-clock overhead
+                yield env.timeout(to_ckpt)
+                compute += to_ckpt
+                left -= to_ckpt
+                ttf -= to_ckpt
+                ckpt_work = 0.0
+                if p.checkpoint_cost > 0:
+                    yield env.timeout(p.checkpoint_cost)
+                    m.checkpoint_overhead += p.checkpoint_cost
+            if completed:
                 break
-
-            yield env.timeout(ttf)
 
             # ---- failure: coordinator stops the group --------------------
             m.n_failures += 1
@@ -150,7 +182,7 @@ class Coordinator:
                 m.n_random_failures += 1
             assert failed is not None
             failed.record_failure(env.now, is_systematic)
-            self._bank_progress(phase_start)
+            self._bank_progress(compute, ckpt_work)
 
             # a failed standby (standbys_can_fail) just leaves the standby
             # list; the job itself does not restart
@@ -333,7 +365,6 @@ class Coordinator:
             if env.now >= p.max_sim_time:
                 m.timed_out = True
                 break
-            phase_start = env.now
             if p.standbys_can_fail and self.scheduler.standbys:
                 standby_good = [s for s in self.scheduler.standbys
                                 if not s.is_bad]
@@ -346,19 +377,60 @@ class Coordinator:
                 ttf, failed, is_systematic = self.sampler.sample_first_failure(
                     self.running_good, self.running_bad)
 
-            try:
-                if ttf >= self.remaining_work:
-                    yield env.timeout(self.remaining_work)
-                    m.run_durations.append(self.remaining_work)
-                    m.useful_work += self.remaining_work
-                    self.remaining_work = 0.0
+            # checkpoint segment loop (see run_job), racing the injector:
+            # an Interrupt mid-compute rolls back to the last durable
+            # checkpoint; an Interrupt mid-WRITE loses nothing (durable
+            # from write start) and charges only the partial write wall
+            # time actually elapsed — the CTMC engine's in_ckpt timing.
+            compute = 0.0
+            ckpt_work = 0.0
+            left = self.remaining_work
+            completed = False
+            interrupted = False
+            while True:
+                to_ckpt = (p.checkpoint_interval - ckpt_work
+                           if p.checkpoint_interval > 0 else math.inf)
+                seg_start = env.now
+                write_start = None
+                try:
+                    if left <= ttf and left <= to_ckpt:
+                        yield env.timeout(left)
+                        compute += left
+                        m.run_durations.append(compute)
+                        m.useful_work += compute
+                        self.remaining_work = 0.0
+                        completed = True
+                        break
+                    if ttf <= to_ckpt:
+                        yield env.timeout(ttf)
+                        compute += ttf
+                        ckpt_work += ttf
+                        break
+                    yield env.timeout(to_ckpt)
+                    compute += to_ckpt
+                    left -= to_ckpt
+                    ttf -= to_ckpt
+                    ckpt_work = 0.0
+                    if p.checkpoint_cost > 0:
+                        write_start = env.now
+                        yield env.timeout(p.checkpoint_cost)
+                        m.checkpoint_overhead += p.checkpoint_cost
+                except Interrupt:
+                    # shock/kill hit the group: the run interval ends
+                    # here (banked like a failure), then group restart
+                    if write_start is not None:
+                        m.checkpoint_overhead += env.now - write_start
+                    else:
+                        elapsed = env.now - seg_start
+                        compute += elapsed
+                        ckpt_work += elapsed
+                    self._bank_progress(compute, ckpt_work)
+                    yield from self._shock_recover(env.now)
+                    interrupted = True
                     break
-                yield env.timeout(ttf)
-            except Interrupt:
-                # shock/kill hit the group mid-compute: the run interval
-                # ends here (banked like a failure), then group restart
-                self._bank_progress(phase_start)
-                yield from self._shock_recover(env.now)
+            if completed:
+                break
+            if interrupted:
                 continue
 
             m.n_failures += 1
@@ -368,7 +440,7 @@ class Coordinator:
                 m.n_random_failures += 1
             assert failed is not None
             failed.record_failure(env.now, is_systematic)
-            self._bank_progress(phase_start)
+            self._bank_progress(compute, ckpt_work)
 
             if failed.state is ServerState.STANDBY:
                 self.scheduler.standbys.remove(failed)

@@ -33,9 +33,15 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import numpy as np
 
 #: channel order is part of the compiled-scan state layout — the CTMC
-#: engine always accumulates all three and reports the subset a
-#: :class:`HistogramSpec` selects.
-HIST_CHANNELS: Tuple[str, ...] = ("run_duration", "recovery", "waiting")
+#: engine accumulates the subset a :class:`HistogramSpec` selects, in
+#: this order.  ``goodput`` (one per-replica fraction per completed job)
+#: is opt-in: the default spec tracks the original three duration
+#: channels so existing compiled programs keep their state layout.
+HIST_CHANNELS: Tuple[str, ...] = ("run_duration", "recovery", "waiting",
+                                  "goodput")
+
+#: the default tracked subset (every duration channel; goodput opt-in)
+DEFAULT_CHANNELS: Tuple[str, ...] = ("run_duration", "recovery", "waiting")
 
 
 @dataclass(frozen=True)
@@ -53,6 +59,11 @@ class HistogramSpec:
       * ``waiting``      — replacement-acquisition delay alone (the ETTR
         minus the fixed recovery reload); 0 for standby swaps and
         undiagnosed failures, so mass in the underflow bin is expected.
+      * ``goodput``      — opt-in (not in the default subset): each
+        completed replica's useful-work / wall-time fraction, one record
+        per finished job.  Fractions live in (0, 1], far below the
+        default ``low`` edge — pair it with a linear-friendly range such
+        as ``HistogramSpec(low=0.01, high=1.0)``.
 
     Selecting a channel subset compiles the others *out* of the CTMC
     scan state (smaller carry, fewer scatter lanes), not just out of the
@@ -75,7 +86,7 @@ class HistogramSpec:
     low: float = 1e-2
     high: float = 1e7
     n_bins: int = 128
-    channels: Tuple[str, ...] = HIST_CHANNELS
+    channels: Tuple[str, ...] = DEFAULT_CHANNELS
 
     def __post_init__(self):
         # tolerate list input (yaml/json round trips); keep hashable

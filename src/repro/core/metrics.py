@@ -53,6 +53,10 @@ class RunResult:
     stall_time: float = 0.0            # job waiting with zero capacity
     recovery_overhead: float = 0.0     # sum of recovery_time charges
     lost_work: float = 0.0             # checkpoint-rollback loss (extension)
+    #: wall-clock minutes spent writing periodic checkpoints
+    #: (``Params.checkpoint_cost`` per completed write; partial for a
+    #: write a shock interrupted)
+    checkpoint_overhead: float = 0.0
     run_durations: List[float] = field(default_factory=list)
     #: per-failure downtime (failure -> compute restart; ETTR) and the
     #: replacement-acquisition part of it alone — the event-engine
@@ -73,6 +77,25 @@ class RunResult:
         return 1.0 - self.overhead_fraction
 
     @property
+    def goodput(self) -> float:
+        """Useful work per wall-clock minute — the operator-facing
+        objective (Meta's "Revisiting Reliability" framing): 1.0 means
+        every minute trained; rollback (``lost_work``), checkpoint
+        writes, recovery, and stalls all pull it down."""
+        if self.total_time <= 0:
+            return 0.0
+        return self.useful_work / self.total_time
+
+    @property
+    def goodput_samples(self) -> List[float]:
+        """The ``goodput`` histogram channel's source: one realized
+        goodput sample per *finished* job (timed-out runs record
+        nothing, matching the CTMC engine's record-at-completion)."""
+        if self.timed_out or self.total_time <= 0:
+            return []
+        return [self.useful_work / self.total_time]
+
+    @property
     def mean_run_duration(self) -> float:
         return float(np.mean(self.run_durations)) if self.run_durations else 0.0
 
@@ -88,6 +111,7 @@ class RunResult:
         d = dataclasses.asdict(self)
         d["mean_run_duration"] = self.mean_run_duration
         d["overhead_fraction"] = self.overhead_fraction
+        d["goodput"] = self.goodput
         d["n_incomplete"] = self.n_incomplete
         for k in ("run_durations", "recovery_durations", "waiting_durations",
                   "domain_shocks"):
@@ -98,7 +122,8 @@ class RunResult:
 #: histogram channel -> RunResult list holding its raw values
 _CHANNEL_SOURCES = {"run_duration": "run_durations",
                     "recovery": "recovery_durations",
-                    "waiting": "waiting_durations"}
+                    "waiting": "waiting_durations",
+                    "goodput": "goodput_samples"}
 
 
 #: metric -> extractor used for aggregate statistics
@@ -108,8 +133,8 @@ _SCALAR_METRICS = (
     "n_host_selections", "n_standby_swaps", "n_retired", "n_undiagnosed",
     "n_misdiagnosed", "n_repair_overflow", "n_domain_shocks",
     "n_shock_killed", "n_campaign_events", "n_incomplete", "stall_time",
-    "recovery_overhead", "lost_work", "mean_run_duration",
-    "overhead_fraction",
+    "recovery_overhead", "lost_work", "checkpoint_overhead",
+    "mean_run_duration", "overhead_fraction", "goodput",
 )
 
 _PERCENTILES = (25, 50, 75, 90, 99)
@@ -312,6 +337,10 @@ def aggregate_arrays(arrays: Dict[str, np.ndarray],
         "overhead_fraction": np.where(
             total_time > 0,
             1.0 - np.asarray(arrays["useful_work"], np.float64) / safe_total,
+            0.0),
+        "goodput": np.where(
+            total_time > 0,
+            np.asarray(arrays["useful_work"], np.float64) / safe_total,
             0.0),
     }
     if "completed" in arrays:

@@ -118,6 +118,12 @@ class Params:
     #: work since the last checkpoint (interval in minutes). 0 = paper model
     #: (all failure cost folded into recovery_time).
     checkpoint_interval: float = 0.0
+    #: wall-clock minutes each periodic checkpoint *write* costs (charged
+    #: every ``checkpoint_interval`` minutes of useful compute; the
+    #: failure clock is frozen while the write runs).  0 = free writes —
+    #: the historical model, where only rollback is priced.  Both knobs
+    #: are traced sweep axes on the CTMC fast path.
+    checkpoint_cost: float = 0.0
     #: fixed preemption cost charged per spare-pool server drawn
     #: (assumption 7: "fixed cost per server ... that was preempted").
     preemption_cost: float = 0.0
@@ -197,7 +203,8 @@ class Params:
                 raise ValueError(f"{name}={v} must be a probability")
         for name in ("random_failure_rate", "systematic_failure_rate",
                      "recovery_time", "job_length", "host_selection_time",
-                     "waiting_time", "auto_repair_time", "manual_repair_time"):
+                     "waiting_time", "auto_repair_time", "manual_repair_time",
+                     "checkpoint_interval", "checkpoint_cost"):
             if getattr(self, name) < 0:
                 raise ValueError(f"{name} must be non-negative")
         if self.max_run_records < 1:

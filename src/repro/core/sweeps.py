@@ -56,7 +56,8 @@ from .params import Params
 DEFAULT_STATS = ("total_time", "n_failures", "n_random_failures",
                  "n_systematic_failures", "n_preemptions", "n_auto_repairs",
                  "n_manual_repairs", "n_host_selections", "stall_time",
-                 "overhead_fraction", "mean_run_duration",
+                 "overhead_fraction", "goodput", "lost_work",
+                 "checkpoint_overhead", "mean_run_duration",
                  "n_domain_shocks", "n_incomplete")
 
 

@@ -43,6 +43,19 @@ reference accumulator in :mod:`repro.core.histograms` (left-closed /
 right-open, under/overflow slots), so both engines emit comparable
 distributions; ``histogram=None`` compiles the accumulator out.
 
+Checkpoint rollback + write cost: when ``Params.checkpoint_interval``
+is positive, the scan tracks work-since-last-checkpoint in a dedicated
+lane (no lossy ``mod`` arithmetic), charges it back on every failure
+(``lost_work``), and races a deterministic checkpoint-write residual:
+every ``checkpoint_interval`` minutes of phase work the replica enters
+a ``checkpoint_cost``-minute OVERHEAD write (``checkpoint_overhead``),
+during which the failure clock is frozen — the hazard age neither
+advances nor resets, exactly the event engine's segment-loop timing.  A
+checkpoint is durable from write start.  Both knobs are *traced*
+columns: a (checkpoint_interval x checkpoint_cost x anything) grid is
+one XLA program, and ``checkpoint_interval=0`` leaves the residual at
++inf — the same program, bit-identical trajectories and uniform stream.
+
 Shape bucketing: on top of structure padding, ``simulate_ctmc_sweep``
 (``bucketed=True``, the default on the padded path) rounds the point
 count P and replica count R up to powers of two with *inert* padding
@@ -161,8 +174,8 @@ _METRICS = ("total_time", "n_failures", "n_random_failures",
             "n_manual_repairs", "n_failed_repairs", "n_host_selections",
             "n_standby_swaps", "n_undiagnosed", "n_misdiagnosed",
             "stall_time", "recovery_overhead", "lost_work", "useful_work",
-            "n_repair_overflow", "n_domain_shocks", "n_shock_killed",
-            "n_campaign_events")
+            "checkpoint_overhead", "n_repair_overflow", "n_domain_shocks",
+            "n_shock_killed", "n_campaign_events")
 
 
 def unsupported_reasons(params: Params) -> list:
@@ -217,8 +230,6 @@ fast path (a struck in-shop server would need a per-slot redraw)']
         reasons.append("retirement policies are event-engine-only")
     if params.bad_set_regeneration_period != 0:
         reasons.append("bad-set regeneration is event-engine-only")
-    if params.checkpoint_interval != 0:
-        reasons.append("checkpoint rollback is event-engine-only")
     if params.standbys_can_fail:
         reasons.append("failing warm standbys are event-engine-only")
     return reasons
@@ -234,10 +245,11 @@ def supports(params: Params) -> bool:
     distributions (sampled at shop entry via inverse CDF through the
     repair-slot lane), plus trace-driven ``empirical`` piecewise-
     constant hazards on both sides — see :mod:`repro.core.hazards`.
-    The event-engine-only extensions (retirement, bad-set regeneration,
-    checkpoint rollback, failing standbys) must be off.
-    ``engine="auto"`` falls back to the event engine whenever this
-    returns False.
+    Checkpoint rollback (``checkpoint_interval`` / ``checkpoint_cost``)
+    runs on the fast path too, as traced knobs.  The event-engine-only
+    extensions (retirement, bad-set regeneration, failing standbys)
+    must be off.  ``engine="auto"`` falls back to the event engine
+    whenever this returns False.
 
     >>> from repro.core import Params
     >>> supports(Params())                                    # Table-I default
@@ -388,6 +400,15 @@ def _initial_state_batch(pts, R: int, max_runs: int,
         state["repair_cls"] = jnp.zeros((B, n_slots), jnp.int32)
         state["repair_stage"] = jnp.zeros((B, n_slots), jnp.int32)
     state["cur_run"] = jnp.zeros((B,), jnp.float32)
+    #: compute minutes since the last durable checkpoint (resets at every
+    #: write, restart, and completion); the failure's rollback charge and
+    #: the write residual both read it — a dedicated lane instead of
+    #: ``mod(phase_work, interval)``, which drifts under fp accumulation.
+    #: Inert (stays 0-cost) when checkpoint_interval == 0.
+    state["ckpt_work"] = jnp.zeros((B,), jnp.float32)
+    #: 1.0 while the OVERHEAD phase is a checkpoint *write* (whose expiry
+    #: resumes compute without resetting the hazard age), 0.0 otherwise
+    state["in_ckpt"] = jnp.zeros((B,), jnp.float32)
     state["n_runs"] = jnp.zeros((B,), jnp.int32)
     state["run_durations"] = jnp.zeros((B, max_runs), jnp.float32)
     spec = pts[0].histogram
@@ -558,7 +579,7 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     ``pv`` is either a single parameter vector shared by the whole batch
     or a (B, n_cols) matrix with one parameter row per replica — the
     layout the batched sweep uses after flattening the (points x
-    replicas) grid.  Columns 0..14 are the base model parameters;
+    replicas) grid.  Columns 0..15 are the base model parameters;
     the next ``hazards.hazard_col_count(kind, n_seg)`` columns are the
     failure-hazard block and the ``hazards.repair_col_count(rkind,
     n_rseg)`` after that the repair block, whose interpretations the
@@ -581,16 +602,16 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     """
     n_hc = hazards.hazard_col_count(kind, n_seg)
     n_rc = hazards.repair_col_count(rkind, n_rseg)
-    n_cols = 15 + n_hc + n_rc
+    n_cols = 16 + n_hc + n_rc
     if pv.ndim == 1:
-        cols = [pv[i] for i in range(15)]
+        cols = [pv[i] for i in range(16)]
         _c = lambda x: x            # param vs (B, 4) class arrays
     else:
-        cols = [pv[:, i] for i in range(15)]
+        cols = [pv[:, i] for i in range(16)]
         _c = lambda x: x[:, None]
     (r_rand, r_sys, recovery, host_sel, waiting, auto_t, man_t,
      auto_fail, man_fail, p_auto, dp, du, ckpt, preempt_cost,
-     warm_standbys) = cols
+     warm_standbys, ckpt_cost) = cols
 
     def _vcol(lo, n):
         # contiguous column block (shared row or per-replica matrix);
@@ -601,25 +622,25 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     if kind == "empirical":
         # [rand edges (m-1), rand rates (m), sys edges (m-1), sys rates
         # (m)] — per-clock piecewise-constant hazards (hazard_columns)
-        e_re = _vcol(15, n_seg - 1)
-        e_rr = _vcol(15 + n_seg - 1, n_seg)
-        e_se = _vcol(15 + 2 * n_seg - 1, n_seg - 1)
-        e_sr = _vcol(15 + 3 * n_seg - 2, n_seg)
+        e_re = _vcol(16, n_seg - 1)
+        e_rr = _vcol(16 + n_seg - 1, n_seg)
+        e_se = _vcol(16 + 2 * n_seg - 1, n_seg - 1)
+        e_sr = _vcol(16 + 3 * n_seg - 2, n_seg)
         hz = None
     else:
         hz = [pv[i] if pv.ndim == 1 else pv[:, i]
-              for i in range(15, 15 + n_hc)]
+              for i in range(16, 16 + n_hc)]
     if rkind == "empirical":
         # [auto edges, auto rates, manual edges, manual rates] — stage
         # selection happens at slot entry below (repair_columns)
-        r_ae = _vcol(15 + n_hc, n_rseg - 1)
-        r_ar = _vcol(15 + n_hc + n_rseg - 1, n_rseg)
-        r_me = _vcol(15 + n_hc + 2 * n_rseg - 1, n_rseg - 1)
-        r_mr = _vcol(15 + n_hc + 3 * n_rseg - 2, n_rseg)
+        r_ae = _vcol(16 + n_hc, n_rseg - 1)
+        r_ar = _vcol(16 + n_hc + n_rseg - 1, n_rseg)
+        r_me = _vcol(16 + n_hc + 2 * n_rseg - 1, n_rseg - 1)
+        r_mr = _vcol(16 + n_hc + 3 * n_rseg - 2, n_rseg)
         rz = None
     else:
         rz = [pv[i] if pv.ndim == 1 else pv[:, i]
-              for i in range(15 + n_hc, n_cols)]
+              for i in range(16 + n_hc, n_cols)]
 
     if scen is not None:
         # scenario columns: [rates (D), fractions (D), times (L),
@@ -654,6 +675,9 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     in_overhead = s["phase"] == OVERHEAD
     stalled = s["phase"] == STALL
     active = s["phase"] != DONE
+    # OVERHEAD flavor: a checkpoint *write* (timer expiry resumes compute
+    # without resetting the hazard age) vs a recovery/restart (which does)
+    in_ckpt_flag = s["in_ckpt"] > 0
     age = s["age"]
     # thinning families evaluate hazards on the float32 view: the
     # float64 age carve-out targets the weibull inversion / repair
@@ -804,6 +828,15 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     ]
     if haz_resid is not None:
         resid_cols.append(haz_resid)
+    # checkpoint-write residual, appended LAST so no existing event index
+    # shifts and an exact tie with completion resolves completion-first
+    # (a finished job does not pay a final write on either engine).  At
+    # checkpoint_interval == 0 the column is identically +inf — the race
+    # never picks it and trajectories match the interval-free program
+    # bit for bit.
+    resid_cols.append(jnp.where(
+        computing & (ckpt > 0),
+        jnp.maximum(ckpt - s["ckpt_work"], 0.0), jnp.inf))
     residuals = jnp.stack(resid_cols, axis=-1)
 
     dt, ev = ops.event_race(rates, residuals, u_time, u_pick, impl=impl)
@@ -876,6 +909,10 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         is_man = is_rep & (done_stage == 1)
     is_complete = active & (ev == kx + coff + roff)
     is_timer = active & (ev == kx + coff + roff + 1)
+    # checkpoint-write event: the last residual column (after the
+    # hazard-window column when the family has one)
+    ckpt_ev = kx + coff + roff + 2 + (1 if haz_resid is not None else 0)
+    is_ckpt = active & (ev == ckpt_ev)
 
     if scen is not None:
         # ---- correlated shock / campaign event sizing -------------------
@@ -996,15 +1033,30 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
 
     # ---- progress accounting -------------------------------------------
     # work accrues during every COMPUTE interval regardless of which event
-    # ends it (failures, repair completions, job completion); only
-    # failures roll back to the last checkpoint (extension knob).
+    # ends it (failures, repair completions, job completion); failures —
+    # and bulk shocks that gut the running block — roll back to the last
+    # durable checkpoint.  The rollback charge is the dedicated
+    # ``ckpt_work`` lane (work since the last write), so ``banked`` can go
+    # negative on a failing step: it restores the already-banked portion
+    # of the doomed interval, keeping the running sums algebraically
+    # exact (sum(banked) = progress_total - lost_total) with no mod
+    # arithmetic.  checkpoint_interval == 0 keeps the historical model:
+    # nothing is ever lost.
     progress = jnp.where(computing, dt, 0.0)
-    lost = jnp.where(is_fail & (ckpt > 0),
-                     jnp.mod(progress, jnp.maximum(ckpt, 1e-9)), 0.0)
+    rollback = is_fail
+    if scen is not None:
+        rollback = rollback | (sh_affects & (computing | in_ckpt_flag))
+    new_ckpt_work = s["ckpt_work"] + progress
+    lost = jnp.where(rollback & (ckpt > 0), new_ckpt_work, 0.0)
     banked = progress - lost
     ns["work_left"] = s["work_left"] - banked
     ns["useful_work"] = s["useful_work"] + banked
     ns["lost_work"] = s["lost_work"] + lost
+    # reset at every rollback, write start (durable from write start),
+    # and completion; a paid write freezes the lane at 0 until compute
+    # resumes (progress == 0 through OVERHEAD)
+    ns["ckpt_work"] = jnp.where(rollback | is_ckpt | is_complete,
+                                0.0, new_ckpt_work)
 
     # ---- completion / timer ----------------------------------------------
     # deterministic timers advance with the clock even when a concurrent
@@ -1014,6 +1066,21 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     ns["phase"] = jnp.where(is_timer, COMPUTE, ns["phase"])
     ns["timer"] = jnp.where(is_timer, jnp.inf, timer_dec)
     ns["total_time"] = jnp.where(is_complete, ns["t"], s["total_time"])
+
+    # ---- checkpoint writes ----------------------------------------------
+    # a paid write runs as an OVERHEAD interval flagged in_ckpt (its
+    # expiry must NOT reset the hazard age: the failure clock is frozen
+    # during the write, not restarted); a free write (checkpoint_cost ==
+    # 0) banks the checkpoint without leaving COMPUTE.  Overhead wall
+    # time accrues as it elapses, so a shock interrupting a write
+    # charges only the partial write actually performed.
+    paid_ckpt = is_ckpt & (ckpt_cost > 0)
+    ns["phase"] = jnp.where(paid_ckpt, OVERHEAD, ns["phase"])
+    ns["timer"] = jnp.where(paid_ckpt, ckpt_cost, ns["timer"])
+    ns["in_ckpt"] = jnp.where(is_timer, 0.0,
+                              jnp.where(paid_ckpt, 1.0, s["in_ckpt"]))
+    ns["checkpoint_overhead"] = s["checkpoint_overhead"] \
+        + jnp.where(in_ckpt_flag, dt, 0.0)
 
     # ---- exact run durations -------------------------------------------
     # a "run" is one useful-compute interval between restarts (start or
@@ -1027,8 +1094,10 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     record = is_fail | is_complete
     if scen is not None:
         # a shock gutting the running set ends the in-flight compute
-        # interval exactly like a failure would
-        record = record | (sh_affects & computing)
+        # interval exactly like a failure would — including when it
+        # lands mid-checkpoint-write (the compute interval is still the
+        # one the interrupted write belongs to)
+        record = record | (sh_affects & (computing | in_ckpt_flag))
     run_val = s["cur_run"] + progress
     max_runs = s["run_durations"].shape[1]
     if max_runs:    # static shape: max_runs=0 compiles the buffer out
@@ -1045,8 +1114,10 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
     # when the recovery timer restarts the job — the event engine's
     # "failure clocks restart when the job restarts" semantics.  After a
     # failure the phase is OVERHEAD/STALL, so the frozen age is never
-    # read before the reset.
-    ns["age"] = jnp.where(is_timer, 0.0, age + progress)
+    # read before the reset.  A checkpoint-WRITE expiry resumes compute
+    # with the age it froze at — the write suspends the failure clock,
+    # it does not restart the fleet.
+    ns["age"] = jnp.where(is_timer & ~in_ckpt_flag, 0.0, age + progress)
 
     # ---- failure handling ---------------------------------------------------
     f = is_fail.astype(jnp.float32)
@@ -1193,6 +1264,9 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         ns["timer"] = jnp.where(sh_resolves, shock_timer, ns["timer"])
         ns["phase"] = jnp.where(sh_resolves, OVERHEAD, ns["phase"])
         ns["phase"] = jnp.where(sh_stalls, STALL, ns["phase"])
+        # a shock aborts any in-flight checkpoint write: the ensuing
+        # OVERHEAD is a recovery (age resets when it expires)
+        ns["in_ckpt"] = jnp.where(sh_affects, 0.0, ns["in_ckpt"])
         ns["stall_start"] = jnp.where(sh_stalls & ~stalled, ns["t"],
                                       ns["stall_start"])
         ns["recovery_overhead"] = ns["recovery_overhead"] \
@@ -1286,7 +1360,13 @@ def _step_u(s: Dict[str, jnp.ndarray], u: jnp.ndarray, pv: jnp.ndarray,
         # and unselected channels are compiled out entirely
         channel_vals = {"run_duration": (run_val, record),
                         "recovery": (downtime, ended),
-                        "waiting": (acquire_wait, ended)}
+                        "waiting": (acquire_wait, ended),
+                        # one record per finished job: the realized
+                        # useful-work fraction of its wall clock (pair
+                        # with a (0.01, 1.0) bin range)
+                        "goodput": (ns["useful_work"]
+                                    / jnp.maximum(ns["t"], 1e-9),
+                                    is_complete)}
         vals = jnp.stack([channel_vals[ch][0] for ch in hist_channels],
                          axis=1)
         masks = jnp.stack([channel_vals[ch][1] for ch in hist_channels],
@@ -1311,6 +1391,7 @@ def _params_vector(p: Params) -> jnp.ndarray:
         p.manual_repair_failure_probability, p.automated_repair_probability,
         p.diagnosis_probability, p.diagnosis_uncertainty,
         p.checkpoint_interval, p.preemption_cost, float(p.warm_standbys),
+        p.checkpoint_cost,
     ], np.float32)
     parts = [base, hazards.hazard_columns(p), hazards.repair_columns(p)]
     if faultdomains.scenario_key(p) is not None:
@@ -1339,6 +1420,12 @@ def default_max_steps(p: Params, safety: float = 2.0) -> int:
         extra, extra_h = faultdomains.scenario_budget(p, horizon)
         horizon += extra_h
     steps = max(128, int((lam * horizon + extra) * 3.2 * safety))
+    if p.checkpoint_interval > 0:
+        # every checkpoint_interval minutes of compute burns one
+        # write-event step (plus its expiry step when the write is paid)
+        writes = p.job_length / max(p.checkpoint_interval, 1e-9)
+        steps += int(writes * (2.0 if p.checkpoint_cost > 0 else 1.0)
+                     * safety)
     return steps + int(hazards.phantom_steps(p) * safety)
 
 
@@ -1539,7 +1626,7 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
     ``params_list`` is a sequence of :class:`Params` (the sweep grid, any
     order).  With ``padded=True`` (default) the entire grid — even when
     points differ *structurally* (job_size, pool sizes, warm_standbys,
-    systematic fraction, job_length) — is stacked into one (P, 15)
+    systematic fraction, job_length) — is stacked into one (P, 16)
     parameter array plus per-point padded initial states, expanded to one
     row per replica, and the whole (P * R,) batch runs through the same
     chunked scan as :func:`simulate_ctmc` in a single XLA compilation —

@@ -22,12 +22,12 @@ def test_auto_resolves_ctmc_for_default_model():
 
 
 @pytest.mark.parametrize("params", [
-    BASE.replace(checkpoint_interval=60.0),
     BASE.replace(retirement_threshold=3),
-    # weibull/bathtub/lognormal failures and weibull/lognormal/
-    # deterministic repairs run on the CTMC fast path now
-    # (tests/test_nonexp.py, tests/test_repair_dist.py); deterministic
-    # failures and user-registered families still fall back
+    # weibull/bathtub/lognormal failures, weibull/lognormal/deterministic
+    # repairs, and checkpoint rollback run on the CTMC fast path now
+    # (tests/test_nonexp.py, tests/test_repair_dist.py,
+    # tests/test_checkpoint_opt.py); deterministic failures and
+    # user-registered families still fall back
     BASE.replace(failure_distribution="deterministic"),
     BASE.replace(bad_set_regeneration_period=1440.0),
     BASE.replace(standbys_can_fail=True),
@@ -42,7 +42,7 @@ def test_auto_falls_back_to_event(params):
 
 def test_explicit_ctmc_raises_outside_envelope():
     with pytest.raises(ValueError, match="outside the CTMC envelope"):
-        run_replications(BASE.replace(checkpoint_interval=60.0), 2,
+        run_replications(BASE.replace(retirement_threshold=3), 2,
                          engine="ctmc")
 
 
@@ -68,7 +68,7 @@ def test_ctmc_replications_carry_arrays_not_results():
 
 
 def test_batch_routes_mixed_grids_in_order():
-    grid = [BASE, BASE.replace(checkpoint_interval=60.0),
+    grid = [BASE, BASE.replace(failure_distribution="deterministic"),
             BASE.replace(recovery_time=40.0)]
     reps = run_replications_batch(grid, 4, engine="auto")
     assert [r.engine for r in reps] == ["ctmc", "event", "ctmc"]

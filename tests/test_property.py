@@ -409,3 +409,90 @@ def test_expected_failures_scaling(seed):
     if short.n_failures >= 20:
         ratio = long_.n_failures / max(short.n_failures, 1)
         assert 2.0 < ratio < 8.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint rollback + goodput (deterministic twins live in
+# tests/test_checkpoint_opt.py)
+# ---------------------------------------------------------------------------
+
+_CKPT = Params(job_size=16, working_pool_size=20, spare_pool_size=4,
+               warm_standbys=2, job_length=1 * DAY,
+               random_failure_rate=0.2 / DAY,
+               checkpoint_interval=113.0, checkpoint_cost=5.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(iv=st.sampled_from([0.0, 30.0, 113.0, 300.0]),
+       cost=st.sampled_from([0.0, 2.0, 10.0]),
+       seed=st.integers(0, 2 ** 16))
+def test_goodput_is_a_fraction(iv, cost, seed):
+    """goodput = useful/wall in [0, 1] for any rollback configuration."""
+    from repro.core import run_replications
+    from repro.core.vectorized import simulate_ctmc
+
+    p = _CKPT.replace(checkpoint_interval=iv, checkpoint_cost=cost,
+                      seed=seed)
+    out = simulate_ctmc(p, n_replicas=8, seed=seed)
+    g = np.asarray(out["useful_work"]) / np.maximum(
+        np.asarray(out["total_time"]), 1e-9)
+    assert (g >= 0.0).all() and (g <= 1.0 + 1e-9).all()
+    rep = run_replications(p, 8, engine="ctmc")
+    assert 0.0 <= rep.stats["goodput"].mean <= 1.0 + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_goodput_monotone_nonincreasing_in_cost(seed):
+    """Under common random numbers a dearer write can only hurt: mean
+    goodput is non-increasing in checkpoint_cost (same seed, same
+    interval, CRN across the traced-cost grid)."""
+    from repro.core import run_replications_batch
+
+    grid = [_CKPT.replace(checkpoint_cost=c, seed=seed)
+            for c in (0.0, 2.0, 8.0, 20.0)]
+    reps = run_replications_batch(grid, 32, engine="ctmc")
+    g = [r.stats["goodput"].mean for r in reps]
+    for a, b in zip(g, g[1:]):
+        assert b <= a + 1e-9, g
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), cost=st.sampled_from([0.0, 5.0, 25.0]))
+def test_lost_work_zero_at_interval_zero(seed, cost):
+    """With the interval off the rollback lanes must be exactly dead."""
+    from repro.core.vectorized import simulate_ctmc
+
+    p = _CKPT.replace(checkpoint_interval=0.0, checkpoint_cost=cost,
+                      seed=seed)
+    out = simulate_ctmc(p, n_replicas=8, seed=seed)
+    assert float(np.abs(out["lost_work"]).max()) == 0.0
+    assert float(np.abs(out["checkpoint_overhead"]).max()) == 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 10))
+def test_checkpoint_work_conservation_both_engines(seed):
+    """Every compute minute is either banked (useful) or rolled back
+    (lost): run records satisfy sum(records) = useful + lost - cur_run
+    on the CTMC engine and sum(records) = useful + lost on completed
+    event-engine runs."""
+    from repro.core import simulate
+    from repro.core.vectorized import simulate_ctmc
+
+    p = _CKPT.replace(seed=seed, max_run_records=4096)
+    for r in simulate(p, 2):
+        if r.timed_out:
+            continue
+        assert sum(r.run_durations) == pytest.approx(
+            r.useful_work + r.lost_work, rel=1e-6)
+    out = simulate_ctmc(p, n_replicas=4, seed=seed)
+    buf = np.asarray(out["run_durations"], np.float64)
+    n_runs = np.asarray(out["n_runs"], np.int64)
+    if (n_runs <= buf.shape[1]).all():
+        valid = np.arange(buf.shape[1])[None, :] < n_runs[:, None]
+        recorded = np.where(valid, buf, 0.0).sum(axis=1)
+        expect = (np.asarray(out["useful_work"], np.float64)
+                  + np.asarray(out["lost_work"], np.float64)
+                  - np.asarray(out["cur_run"], np.float64))
+        np.testing.assert_allclose(recorded, expect, rtol=1e-5, atol=1e-6)

@@ -74,7 +74,9 @@ def test_unsupported_params_rejected():
     assert supports(Params(failure_distribution="weibull",
                            repair_distribution="weibull"))
     assert not supports(Params(failure_distribution="deterministic"))
-    assert not supports(Params(checkpoint_interval=60.0))
+    # checkpoint rollback + write cost joined the fast path (PR 9)
+    assert supports(Params(checkpoint_interval=60.0))
+    assert supports(Params(checkpoint_interval=60.0, checkpoint_cost=2.0))
     with pytest.raises(ValueError):
         simulate_ctmc(Params(retirement_threshold=3), n_replicas=4)
 
