@@ -789,6 +789,102 @@ def multijob_smoke(n_replicas: int = 24) -> Dict[str, object]:
     return out
 
 
+def _sharded_child(n_dev: int, n_points: int = 4,
+                   r_per_dev: int = 256) -> Dict[str, object]:
+    """One weak-scaling measurement, run in a fresh process whose
+    XLA_FLAGS already forced ``n_dev`` host devices (see
+    :func:`sharded_weak_scaling` — device count is fixed at jax import,
+    so each mesh size needs its own interpreter)."""
+    import repro.core.vectorized as vz
+
+    assert jax.device_count() >= n_dev, (jax.device_count(), n_dev)
+    base = sweep_bench_params()
+    values = [float(v) for v in np.linspace(5.0, 40.0, n_points)]
+    pts = [base.replace(recovery_time=v) for v in values]
+    R = r_per_dev * n_dev      # weak scaling: per-device work constant
+    steps = max(default_max_steps(p) for p in pts)
+
+    def run(shards):
+        return vz.simulate_ctmc_sweep(pts, n_replicas=R, seed=0,
+                                      max_steps=steps, shards=shards)
+
+    run(n_dev)                                   # compile
+    t0 = time.perf_counter()
+    out = run(n_dev)                             # warm
+    wall = time.perf_counter() - t0
+    rec: Dict[str, object] = {
+        "devices": n_dev,
+        "n_points": n_points,
+        "n_replicas": R,
+        "wall_s": wall,
+        "replicas_per_s": n_points * R / wall,
+        # fresh process: the whole warm sweep must live in ONE compiled
+        # sharded program
+        "sweep_compiles": vz.shard_compile_cache_size(),
+    }
+    if n_dev == 1:
+        def run_unsharded():
+            return vz.simulate_ctmc_sweep(pts, n_replicas=R, seed=0,
+                                          max_steps=steps, shards=0)
+
+        base_out = run_unsharded()               # compile
+        t0 = time.perf_counter()
+        base_out = run_unsharded()               # warm
+        rec["unsharded_wall_s"] = time.perf_counter() - t0
+        rec["unsharded_replicas_per_s"] = (n_points * R
+                                           / rec["unsharded_wall_s"])
+        rec["mesh1_bitident"] = all(
+            np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+            for a, b in zip(out, base_out) for k in a)
+    return rec
+
+
+def sharded_weak_scaling(device_counts=(1, 2, 4)) -> Dict[str, object]:
+    """Weak-scaling curve of the replica-sharded CTMC sweep.
+
+    Spawns one child interpreter per mesh size with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` (the forced
+    host-device recipe of docs/scaling.md) and grows the replica count
+    with the mesh so per-device work stays constant.  Reports per-point
+    throughput, ``weak_scaling_efficiency`` (throughput at D devices
+    over the 1-device mesh), the sharded-vs-unsharded retention at mesh
+    size 1, the one-compile invariant, and the mesh-1 bit-identity
+    check.  NOTE on CPU CI the forced devices share physical cores, so
+    near-flat replica throughput (efficiency ~1) is the pass condition
+    — real speedup needs real devices; scripts/check_bench.py floors
+    efficiency, not speedup.
+    """
+    import json as _json
+    import os
+    import subprocess
+    import sys as _sys
+
+    points = []
+    for d in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        out = subprocess.run(
+            [_sys.executable, os.path.abspath(__file__),
+             "--sharded-child", str(d)],
+            env=env, capture_output=True, text=True, check=True)
+        points.append(_json.loads(out.stdout.strip().splitlines()[-1]))
+    base_tp = points[0]["replicas_per_s"]
+    for p in points:
+        p["weak_scaling_efficiency"] = p["replicas_per_s"] / base_tp
+    un_tp = points[0]["unsharded_replicas_per_s"]
+    return {
+        "device_counts": list(device_counts),
+        "max_devices": device_counts[-1],
+        "points": points,
+        "sharded_speedup_x": points[-1]["replicas_per_s"] / un_tp,
+        "retention_1dev": base_tp / un_tp,
+        "min_weak_scaling_efficiency": min(
+            p["weak_scaling_efficiency"] for p in points),
+        "mesh1_bitident": points[0]["mesh1_bitident"],
+        "sweep_compiles": max(p["sweep_compiles"] or 0 for p in points),
+    }
+
+
 def speedup_summary() -> Dict[str, float]:
     ev = event_engine_throughput(n_runs=3)
     ct = ctmc_engine_throughput(n_replicas=2048)
@@ -820,6 +916,10 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
     import json
     import sys
 
+    if "--sharded-child" in sys.argv:
+        d = int(sys.argv[sys.argv.index("--sharded-child") + 1])
+        print(json.dumps(_sharded_child(d)))
+        sys.exit(0)
     if "--smoke" in sys.argv:
         print(json.dumps({"structural": structural_smoke(),
                           "bucketing": bucketing_smoke(),
@@ -836,15 +936,17 @@ if __name__ == "__main__":   # standalone: sweep benchmarks or CI smoke
     sw["correlated"] = correlated_sweep_throughput()
     sw["multijob"] = multijob_sweep_throughput()
     sw["checkpoint"] = checkpoint_sweep_throughput()
+    sw["sharded"] = sharded_weak_scaling()
     sections = ("points", "structural", "bucketing", "nonexp", "repair_dist",
-                "empirical", "correlated", "multijob", "checkpoint")
+                "empirical", "correlated", "multijob", "checkpoint",
+                "sharded")
     print(json.dumps({k: v for k, v in sw.items() if k not in sections},
                      indent=2))
     print(json.dumps({k: v for k, v in sw["structural"].items()
                       if k != "points"}, indent=2))
     print(json.dumps(sw["bucketing"], indent=2))
     for sec in ("nonexp", "repair_dist", "empirical", "correlated",
-                "multijob", "checkpoint"):
+                "multijob", "checkpoint", "sharded"):
         print(json.dumps({k: v for k, v in sw[sec].items()
                           if k != "points"}, indent=2))
     print("wrote", write_sweep_artifact(sw))

@@ -45,6 +45,18 @@ FULL_SPEEDUP_FLOORS = {
     "checkpoint.speedup_x": 3.0,    # rollback interval grid (acceptance)
 }
 
+#: non-speedup numeric floors — the replica-sharding section reports
+#: throughput *retention* ratios (forced host devices share physical
+#: cores on CI, so weak-scaling efficiency ~1 is ideal and real speedup
+#: needs real devices; docs/scaling.md); floors catch the sharded path
+#: collapsing, not parallel hardware appearing
+FULL_VALUE_FLOORS = {
+    # sharded throughput per replica at D devices vs the 1-device mesh
+    "sharded.min_weak_scaling_efficiency": 0.3,
+    # 1-device sharded dispatch vs the unsharded engine (shard_map tax)
+    "sharded.retention_1dev": 0.6,
+}
+
 #: exact compile-count invariants of the full artifact
 FULL_COMPILE_GATES = {
     "structural.padded_compiles": 1,
@@ -57,6 +69,8 @@ FULL_COMPILE_GATES = {
     "multijob.sweep_compiles": 1,
     # interval and cost are traced columns: one program per interval grid
     "checkpoint.sweep_compiles": 1,
+    # mesh is a static key: one sharded program per weak-scaling child
+    "sharded.sweep_compiles": 1,
 }
 
 _FAILURES = []
@@ -209,6 +223,53 @@ def run_quick(baseline: dict, tolerance: float) -> None:
           f"{'MISSING' if b_ck is None else f'{b_ck:.2f}x'} (8x256); "
           f"floor {tolerance:.2f}x of committed")
 
+    # the replica-sharded dispatch at mesh size 1: bit-identity is exact
+    # (the contract, not a tolerance) and the shard_map tax must not
+    # collapse throughput
+    _quick_sharded(baseline, tolerance)
+
+
+def _quick_sharded(baseline: dict, tolerance: float) -> None:
+    """1-device-mesh retention + bit-identity, in-process (quick CI has
+    one visible device; the multi-device curve is full-mode only)."""
+    import numpy as np
+
+    import repro.core.vectorized as vz
+    from benchmarks.engine_perf import sweep_bench_params
+    from repro.core import MINUTES_PER_DAY
+    from repro.core.vectorized import default_max_steps
+
+    base = sweep_bench_params().replace(job_length=0.5 * MINUTES_PER_DAY,
+                                        max_run_records=67)
+    pts = [base.replace(recovery_time=v)
+           for v in (5.0, 15.0, 25.0, 35.0)]
+    steps = max(default_max_steps(p) for p in pts)
+
+    def run(shards):
+        return vz.simulate_ctmc_sweep(pts, n_replicas=64, seed=0,
+                                      max_steps=steps, shards=shards)
+
+    sh = run(1)                                   # compile
+    t0 = time.perf_counter()
+    sh = run(1)
+    sharded_s = time.perf_counter() - t0
+    un = run(0)                                   # compile
+    t0 = time.perf_counter()
+    un = run(0)
+    unsharded_s = time.perf_counter() - t0
+
+    ident = all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+                for a, b in zip(sh, un) for k in a)
+    _gate("quick.sharded_mesh1_bitident", ident,
+          "1-device mesh output identical to unsharded engine")
+    q_ret = unsharded_s / max(sharded_s, 1e-9)
+    b_ret = _lookup(baseline, "sharded.retention_1dev")
+    _gate("quick.sharded_retention",
+          b_ret is not None and q_ret >= tolerance * b_ret,
+          f"measured {q_ret:.2f} retention (4x64 grid) vs committed "
+          f"{'MISSING' if b_ret is None else f'{b_ret:.2f}'}; "
+          f"floor {tolerance:.2f}x of committed")
+
 
 def _quick_multijob_ab(cluster, jobs, n_replicas):
     """Warm multi-job CTMC wall vs the event oracle on a 4-point grid."""
@@ -243,6 +304,16 @@ def run_full(fresh: dict, baseline: dict, rel_tolerance: float) -> None:
             _gate(f"full.{key}.band", ok,
                   f"{val if val is None else round(val, 2)}x within "
                   f"{rel_tolerance:.0%} of baseline {round(base, 2)}x")
+    for key, floor in FULL_VALUE_FLOORS.items():
+        val = _lookup(fresh, key)
+        _gate(f"full.{key}.floor", val is not None and val >= floor,
+              f"{val if val is None else round(val, 3)} >= {floor}")
+    val = _lookup(fresh, "sharded.mesh1_bitident")
+    _gate("full.sharded.mesh1_bitident", val is True,
+          f"1-device mesh bit-identical to unsharded engine: {val}")
+    val = _lookup(fresh, "sharded.max_devices")
+    _gate("full.sharded.max_devices", val is not None and val >= 4,
+          f"weak-scaling curve reaches {val} forced host devices (>= 4)")
     for key, want in FULL_COMPILE_GATES.items():
         val = _lookup(fresh, key)
         # None = jit-cache introspection unavailable on this jax: the
@@ -278,6 +349,11 @@ def append_history(fresh: dict, path: str) -> None:
         "multijob_compiles": _lookup(fresh, "multijob.sweep_compiles"),
         "checkpoint_speedup_x": _lookup(fresh, "checkpoint.speedup_x"),
         "checkpoint_compiles": _lookup(fresh, "checkpoint.sweep_compiles"),
+        "sharded_speedup_x": _lookup(fresh, "sharded.sharded_speedup_x"),
+        "sharded_devices": _lookup(fresh, "sharded.max_devices"),
+        "sharded_efficiency": _lookup(
+            fresh, "sharded.min_weak_scaling_efficiency"),
+        "sharded_compiles": _lookup(fresh, "sharded.sweep_compiles"),
     }
     with open(path, "a") as f:
         f.write(json.dumps(record) + "\n")
@@ -293,6 +369,10 @@ def main() -> int:
     ap.add_argument("--quick", action="store_true",
                     help="scaled-down re-measurement vs the baseline "
                          "(default when --fresh is absent)")
+    ap.add_argument("--quick-sharded", action="store_true",
+                    help="only the replica-sharding quick gates "
+                         "(mesh-1 bit-identity + retention) — what the "
+                         "multi-device CI job runs")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="quick mode: fraction of the committed speedup "
                          "the small-grid measurement must reach")
@@ -312,6 +392,11 @@ def main() -> int:
         run_full(fresh, baseline, args.rel_tolerance)
         if not _FAILURES and args.append_history:
             append_history(fresh, args.append_history)
+    elif args.quick_sharded:
+        import os
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        _quick_sharded(baseline, args.tolerance)
     else:
         run_quick(baseline, args.tolerance)
 

@@ -57,7 +57,8 @@ python -m pytest -q -p no:randomly -p no:cacheprovider --doctest-modules \
     src/repro/core/params.py src/repro/core/histograms.py \
     src/repro/core/backend.py src/repro/core/sweeps.py \
     src/repro/core/vectorized.py src/repro/core/hazards.py \
-    src/repro/core/faultdomains.py src/repro/core/empirical.py
+    src/repro/core/faultdomains.py src/repro/core/empirical.py \
+    src/repro/parallel/sharding.py src/repro/kernels/ops.py
 
 # docs suite link check: every relative markdown link in README/docs
 # must resolve to a real file (no network; scheme links are skipped)
@@ -72,6 +73,15 @@ python -m pytest -q -p no:randomly -p no:cacheprovider \
     tests/test_repair_dist.py tests/test_faultdomains.py \
     tests/test_multijob_parity.py tests/test_empirical.py \
     tests/test_checkpoint_opt.py
+
+# replica-sharding parity on a forced 4-device CPU mesh: the per-shard
+# independence contract, exact histogram/ring-buffer merges, and the
+# sharded compile invariant all need >= 4 visible devices, which must
+# be forced via XLA_FLAGS *before* jax imports — hence a fresh
+# interpreter rather than a pytest lane of the tier-1 run above
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m pytest -q -p no:randomly -p no:cacheprovider \
+    tests/test_replica_sharding.py
 
 # trace-driven fitting smoke: synthetic log -> fit_piecewise_hazard ->
 # JSON round trip -> a short CTMC study from the fitted hazard

@@ -181,6 +181,22 @@ class Params:
     #: ``kill domain d at t`` and repair-shop maintenance windows,
     #: honored exactly by both engines.  ``None`` disables.
     campaign: Optional[Campaign] = None
+    #: shard the CTMC engine's replica axis over this many local devices
+    #: via ``shard_map`` (see :mod:`repro.parallel.sharding` and
+    #: docs/scaling.md).  0 (default) = unsharded single-device dispatch;
+    #: 1 = a one-device mesh (bit-identical to 0, guarded by tests);
+    #: N > 1 splits each point's replicas into N independently-seeded
+    #: streams (exact-in-law, not bit-identical to the unsharded run).
+    #: Requires N visible devices and N | replica count — violations
+    #: raise, never silently de-shard.
+    engine_shards: int = 0
+    #: event-race kernel dispatch of the CTMC engine: ``None`` (default)
+    #: auto-selects — the Pallas kernel on TPU, the pure-jnp reference
+    #: elsewhere.  ``"ref"`` forces the reference, ``"pallas"`` the TPU
+    #: kernel (raises off-TPU), ``"pallas_interpret"`` the kernel body in
+    #: interpret mode (CPU-runnable validation; slow).  See
+    #: docs/scaling.md.
+    event_race_impl: Optional[str] = None
 
     # -------------------------------------------------------------------------
     def validate(self) -> None:
@@ -218,6 +234,14 @@ class Params:
         if self.repair_servers < 0:
             raise ValueError("repair_servers must be non-negative "
                              "(0 = unlimited)")
+        if self.engine_shards < 0:
+            raise ValueError("engine_shards must be non-negative "
+                             "(0 = unsharded)")
+        if self.event_race_impl not in (None, "ref", "pallas",
+                                        "pallas_interpret"):
+            raise ValueError(
+                f"event_race_impl={self.event_race_impl!r} must be None, "
+                "'ref', 'pallas', or 'pallas_interpret'")
         if self.histogram is not None:
             self.histogram.validate()
         if self.fault_domains is not None:

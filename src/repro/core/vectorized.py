@@ -160,8 +160,11 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.kernels import ops
+from repro.parallel import sharding as rsharding
 from . import faultdomains, hazards
 from .histograms import HIST_CHANNELS
 from .params import Params
@@ -1450,26 +1453,25 @@ def _struct_key(p: Params):
             round(p.job_length, 3), round(p.host_selection_time, 3))
 
 
-@partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "impl",
-                                   "early_exit", "struct_key", "kind",
-                                   "rkind", "hist_channels", "scen",
-                                   "n_seg", "n_rseg"))
-def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
-                 chunk: int, n_chunks, rem: int, impl: Optional[str],
-                 early_exit: bool, struct_key, kind: str, rkind: str,
-                 hist_channels: tuple, scen,
-                 init_state: Dict[str, jnp.ndarray],
-                 n_seg: int = 0, n_rseg: int = 0):
+def _chunk_loop(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
+                chunk: int, n_chunks, rem: int, impl: Optional[str],
+                early_exit: bool, kind: str, rkind: str,
+                hist_channels: tuple, scen,
+                init_state: Dict[str, jnp.ndarray],
+                n_seg: int = 0, n_rseg: int = 0):
     """Chunked scan with early exit; batch axis is B = P * R (point-major).
 
-    Runs exactly ``n_chunks * chunk + rem`` steps (minus chunks skipped
-    by early exit).  ``n_chunks`` is a *traced* scalar — the while-loop
-    trip count — so any two budgets with the same chunk size and
-    remainder share one compiled program (the bucketed sweep path rounds
-    the budget so ``rem == 0`` always).  Uniforms are drawn per *replica
-    column* at the power-of-two width ``next_pow2(R)`` and sliced to R,
-    then tiled across the P points: every sweep point sees common random
-    numbers (the batched analogue of the event engine's
+    The shared compute core of :func:`_run_chunked` (single-device jit)
+    and :func:`_run_chunked_sharded` (per-shard body under shard_map,
+    where R is the shard-local replica count and ``key`` the shard's
+    folded key).  Runs exactly ``n_chunks * chunk + rem`` steps (minus
+    chunks skipped by early exit).  ``n_chunks`` is a *traced* scalar —
+    the while-loop trip count — so any two budgets with the same chunk
+    size and remainder share one compiled program (the bucketed sweep
+    path rounds the budget so ``rem == 0`` always).  Uniforms are drawn
+    per *replica column* at the power-of-two width ``next_pow2(R)`` and
+    sliced to R, then tiled across the P points: every sweep point sees
+    common random numbers (the batched analogue of the event engine's
     same-seed-per-replication policy), and a bucket-padded run draws the
     identical stream for its real replica columns.
     """
@@ -1524,6 +1526,100 @@ def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
     return state
 
 
+@partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "impl",
+                                   "early_exit", "struct_key", "kind",
+                                   "rkind", "hist_channels", "scen",
+                                   "n_seg", "n_rseg"))
+def _run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
+                 chunk: int, n_chunks, rem: int, impl: Optional[str],
+                 early_exit: bool, struct_key, kind: str, rkind: str,
+                 hist_channels: tuple, scen,
+                 init_state: Dict[str, jnp.ndarray],
+                 n_seg: int = 0, n_rseg: int = 0):
+    """Single-device jit entry over :func:`_chunk_loop` (see there).
+
+    ``struct_key`` is unused in the body — it is a static argument
+    precisely so the legacy ``padded=False`` path compiles one program
+    per structure.
+    """
+    return _chunk_loop(pv, key, P, R, chunk, n_chunks, rem, impl,
+                       early_exit, kind, rkind, hist_channels, scen,
+                       init_state, n_seg, n_rseg)
+
+
+@partial(jax.jit, static_argnames=("mesh", "P", "R", "chunk", "rem",
+                                   "impl", "early_exit", "struct_key",
+                                   "kind", "rkind", "hist_channels",
+                                   "scen", "n_seg", "n_rseg"))
+def _run_chunked_sharded(pv: jnp.ndarray, keys: jax.Array, P: int, R: int,
+                         chunk: int, n_chunks, rem: int,
+                         impl: Optional[str], early_exit: bool, struct_key,
+                         kind: str, rkind: str, hist_channels: tuple, scen,
+                         init_state: Dict[str, jnp.ndarray],
+                         n_seg: int = 0, n_rseg: int = 0, *, mesh):
+    """Replica-sharded twin of :func:`_run_chunked` via ``shard_map``.
+
+    Reshapes every batched state leaf ``(P*R, ...) -> (P, R, ...)``,
+    shards the replica axis over the 1-D device mesh
+    (:func:`repro.parallel.sharding.replica_mesh`), and runs
+    :func:`_chunk_loop` independently per shard with that shard's folded
+    key (``keys`` is the :func:`repro.parallel.sharding.shard_keys`
+    stack, one row per device).  There are no collectives inside the
+    body — shards early-exit independently — and the ``out_specs``
+    concatenation IS the cross-device merge: every output lane
+    (metric scalars, histogram accumulators, run-record ring buffers)
+    is per-replica, so reassembling the replica axis recovers the exact
+    flat ``(P*R, ...)`` layout.  Unbatched leaves (``hist_edges``) ride
+    along replicated.
+
+    With a 1-device mesh ``keys[0]`` is the unsplit base key and the
+    body sees exactly the arguments :func:`_run_chunked` would, so the
+    output is bit-identical to the unsharded engine (pinned by
+    tests/test_replica_sharding.py).
+    """
+    n_shards = mesh.shape[rsharding.REPLICA_AXIS]
+    R_loc = R // n_shards
+    unbatched = {k: init_state[k] for k in _UNBATCHED_STATE
+                 if k in init_state}
+    state = {k: v.reshape((P, R) + v.shape[1:])
+             for k, v in init_state.items() if k not in unbatched}
+    rspec = PartitionSpec(None, rsharding.REPLICA_AXIS)
+    # simulate_ctmc passes one shared (n_cols,) parameter vector
+    # (replicated); the sweep path passes per-row (P*R, n_cols) columns
+    # (sharded like the state)
+    pv_batched = pv.ndim == 2
+    pv2 = pv.reshape((P, R, pv.shape[-1])) if pv_batched else pv
+    pv_spec = rspec if pv_batched else PartitionSpec()
+    out_specs = {k: rspec for k in list(state) + ["completed"]}
+
+    def body(keys_s, pv_s, n_chunks_s, unbatched_s, state_s):
+        flat = {k: v.reshape((P * R_loc,) + v.shape[2:])
+                for k, v in state_s.items()}
+        flat.update(unbatched_s)
+        pv_flat = (pv_s.reshape(P * R_loc, pv_s.shape[-1])
+                   if pv_batched else pv_s)
+        out = _chunk_loop(pv_flat,
+                          keys_s[0], P, R_loc, chunk, n_chunks_s, rem,
+                          impl, early_exit, kind, rkind, hist_channels,
+                          scen, flat, n_seg, n_rseg)
+        for k in unbatched_s:
+            out.pop(k)
+        return {k: v.reshape((P, R_loc) + v.shape[1:])
+                for k, v in out.items()}
+
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(PartitionSpec(rsharding.REPLICA_AXIS), pv_spec,
+                  PartitionSpec(),
+                  {k: PartitionSpec() for k in unbatched},
+                  rsharding.replica_state_specs(state)),
+        out_specs=out_specs, check_rep=False,
+    )(keys, pv2, n_chunks, unbatched, state)
+    out = {k: v.reshape((P * R,) + v.shape[2:]) for k, v in out.items()}
+    out.update(unbatched)
+    return out
+
+
 def compile_cache_size() -> Optional[int]:
     """Compiled-program cache entries of the chunked-scan driver.
 
@@ -1536,6 +1632,53 @@ def compile_cache_size() -> Optional[int]:
     """
     fn = getattr(_run_chunked, "_cache_size", None)
     return fn() if callable(fn) else None
+
+
+def shard_compile_cache_size() -> Optional[int]:
+    """Compiled-program cache entries of the *sharded* chunked driver.
+
+    The sharded weak-scaling benchmark diffs this around repeated sweeps
+    to assert the sharded path keeps the one-compile invariant (the mesh
+    object is part of the static signature, so re-running at the same
+    device count reuses one program).  Same None-means-unmeasurable
+    contract as :func:`compile_cache_size`.
+    """
+    fn = getattr(_run_chunked_sharded, "_cache_size", None)
+    return fn() if callable(fn) else None
+
+
+def _resolve_shards(shards, pts) -> int:
+    """Effective shard count: the explicit argument, else the (single)
+    ``Params.engine_shards`` value of the batch — a mixed grid raises
+    (sharding is batch-level state; silently de-sharding part of a grid
+    is exactly the failure mode docs/scaling.md promises never happens).
+    """
+    if shards is not None:
+        return shards
+    vals = {p.engine_shards for p in pts}
+    if len(vals) > 1:
+        raise ValueError(
+            f"all points of a batched CTMC sweep must agree on "
+            f"Params.engine_shards (got {sorted(vals)}); the batch axis "
+            f"shards as one unit — split the grid or pass shards= "
+            f"explicitly")
+    return vals.pop()
+
+
+def _shard_mesh(n_shards: int, R: int):
+    """Validated replica mesh for ``n_shards`` shards over R replicas.
+
+    Raises — never silently de-shards — when the shard count does not
+    divide the replica count or exceeds the visible devices.
+    """
+    if R % n_shards:
+        raise ValueError(
+            f"engine_shards={n_shards} does not divide the replica "
+            f"count {R}: the batch axis shards by whole replica "
+            f"columns.  Choose a divisor; bucketed sweeps round R up to "
+            f"a power of two, so any power-of-two shard count <= R "
+            f"divides it (docs/scaling.md)")
+    return rsharding.replica_mesh(n_shards)
 
 
 def _unsupported_error(params: Params) -> ValueError:
@@ -1576,7 +1719,8 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
                   impl: Optional[str] = None,
                   chunk_steps: Optional[int] = None,
                   early_exit: bool = True,
-                  max_runs: Optional[int] = None) -> Dict[str, np.ndarray]:
+                  max_runs: Optional[int] = None,
+                  shards: Optional[int] = None) -> Dict[str, np.ndarray]:
     """Vectorized replication study. Returns {metric: np.ndarray (R,)}.
 
     jit-compiled once per (pool-structure, R, step-budget); parameter
@@ -1594,22 +1738,38 @@ def simulate_ctmc(params: Params, n_replicas: int = 1024, seed: int = 0,
     need scalar metrics: ``mean_run_duration`` stays exact via the
     interval-sum identity over ``n_runs``/``cur_run``, but pooled
     run-duration percentiles degrade to pooling per-replica means.
+
+    ``shards`` (default ``params.engine_shards``; 0 = unsharded) splits
+    the replica axis over that many local devices via shard_map —
+    exact-in-law with per-shard folded keys, bit-identical to the
+    unsharded run at ``shards=1``, loud errors (never a silent de-shard)
+    on indivisible replica counts or missing devices.  ``impl`` (default
+    ``params.event_race_impl``) selects the event-race kernel backend.
+    See docs/scaling.md for both knobs.
     """
     if not supports(params):
         raise _unsupported_error(params)
     params.validate()
+    impl = params.event_race_impl if impl is None else impl
+    shards = _resolve_shards(shards, [params])
     max_steps = max_steps or default_max_steps(params)
     chunk = min(chunk_steps or DEFAULT_CHUNK_STEPS, max_steps)
     init_state = _initial_state(params, n_replicas, max_runs)
     channels = _hist_channels([params])
-    out = _run_chunked(_params_vector(params), jax.random.PRNGKey(seed),
-                       1, n_replicas, chunk, jnp.int32(max_steps // chunk),
-                       max_steps % chunk, impl, early_exit,
-                       _struct_key(params), hazards.hazard_kind(params),
-                       hazards.repair_kind(params), channels,
-                       faultdomains.scenario_key(params), init_state,
-                       hazards.hazard_segment_count(params),
-                       hazards.repair_segment_count(params))
+    args = (1, n_replicas, chunk, jnp.int32(max_steps // chunk),
+            max_steps % chunk, impl, early_exit,
+            _struct_key(params), hazards.hazard_kind(params),
+            hazards.repair_kind(params), channels,
+            faultdomains.scenario_key(params), init_state,
+            hazards.hazard_segment_count(params),
+            hazards.repair_segment_count(params))
+    pv, key = _params_vector(params), jax.random.PRNGKey(seed)
+    if shards:
+        out = _run_chunked_sharded(pv, rsharding.shard_keys(key, shards),
+                                   *args, mesh=_shard_mesh(shards,
+                                                           n_replicas))
+    else:
+        out = _run_chunked(pv, key, *args)
     return _extract(out, channels=channels)
 
 
@@ -1620,7 +1780,8 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
                         early_exit: bool = True,
                         padded: bool = True,
                         bucketed: bool = True,
-                        max_runs: Optional[int] = None):
+                        max_runs: Optional[int] = None,
+                        shards: Optional[int] = None):
     """Batched sweep: one compiled program for the whole grid.
 
     ``params_list`` is a sequence of :class:`Params` (the sweep grid, any
@@ -1660,6 +1821,15 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
     mixing families runs one batch per family; hazard *parameters*
     (rates, ``k``, taus) are traced and share programs freely.
 
+    ``shards`` (default: the grid's shared ``Params.engine_shards``
+    value; a mixed grid raises) splits the replica axis of every batch
+    over that many local devices — see :func:`simulate_ctmc` and
+    docs/scaling.md.  The shard count must divide the *run* replica
+    count (after pow2 bucketing), checked loudly.  ``impl`` defaults to
+    each point's ``Params.event_race_impl``; since the kernel backend is
+    a static compile switch, a grid mixing backends splits into one
+    batch per backend.
+
     Returns a list of ``{metric: np.ndarray (R,)}`` dicts in input order.
     """
     params_list = list(params_list)
@@ -1669,6 +1839,7 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         p.validate()
     if not params_list:
         return []
+    shards = _resolve_shards(shards, params_list)
     if len({p.histogram for p in params_list}) > 1:
         # the batch shares one in-scan accumulator layout (bin edges +
         # channel set are part of the compiled state), so a mixed-spec
@@ -1704,14 +1875,19 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
         gkey = (kind, rkind, p.age_dtype, faultdomains.scenario_key(p),
                 hazards.hazard_segment_count(p),
                 hazards.repair_segment_count(p),
-                None if padded else _struct_key(p))
+                None if padded else _struct_key(p),
+                # the event-race kernel backend is a static compile
+                # switch; an explicit impl= argument overrides every
+                # point's Params knob (one group), otherwise points
+                # split by their requested backend
+                impl if impl is not None else p.event_race_impl)
         groups.setdefault(gkey, []).append(i)
     mr = _max_runs_for(params_list) if max_runs is None else max_runs
 
     bucket = padded and bucketed
     channels = _hist_channels(params_list)
     results: list = [None] * len(params_list)
-    for (kind, rkind, _adt, scen, n_seg, n_rseg, skey), idxs in \
+    for (kind, rkind, _adt, scen, n_seg, n_rseg, skey, impl_eff), idxs in \
             groups.items():
         pts = [params_list[i] for i in idxs]
         P, R = len(pts), n_replicas
@@ -1738,10 +1914,16 @@ def simulate_ctmc_sweep(params_list, n_replicas: int = 1024, seed: int = 0,
                                           scen)
         if (P_run, R_run) != (P, R):
             init_state = _bucket_pad_state(init_state, P, R, P_run, R_run)
-        out = _run_chunked(pv_flat, jax.random.PRNGKey(seed), P_run, R_run,
-                           chunk, jnp.int32(steps // chunk), steps % chunk,
-                           impl, early_exit, skey, kind, rkind, channels,
-                           scen, init_state, n_seg, n_rseg)
+        key = jax.random.PRNGKey(seed)
+        run_args = (P_run, R_run, chunk, jnp.int32(steps // chunk),
+                    steps % chunk, impl_eff, early_exit, skey, kind,
+                    rkind, channels, scen, init_state, n_seg, n_rseg)
+        if shards:
+            out = _run_chunked_sharded(
+                pv_flat, rsharding.shard_keys(key, shards), *run_args,
+                mesh=_shard_mesh(shards, R_run))
+        else:
+            out = _run_chunked(pv_flat, key, *run_args)
         for j, i in enumerate(idxs):
             rows = (slice(j * R_run, j * R_run + R) if R_run == R
                     else np.arange(R) + j * R_run)

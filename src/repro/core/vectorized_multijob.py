@@ -646,16 +646,17 @@ def default_max_steps_multijob(cluster: Params,
     return steps
 
 
-@partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "J", "impl",
-                                   "early_exit", "hist_channels"))
-def _mj_run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
-                    chunk: int, n_chunks, rem: int, J: int,
-                    impl: Optional[str], early_exit: bool,
-                    hist_channels: tuple,
-                    init_state: Dict[str, jnp.ndarray]):
+def _mj_chunk_loop(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
+                   chunk: int, n_chunks, rem: int, J: int,
+                   impl: Optional[str], early_exit: bool,
+                   hist_channels: tuple,
+                   init_state: Dict[str, jnp.ndarray]):
     """Chunked scan with early exit — the multi-job twin of the
-    single-job ``_run_chunked`` (same chunking, bucketing, and
-    common-random-number conventions; see that docstring)."""
+    single-job ``_chunk_loop`` (same chunking, bucketing, and
+    common-random-number conventions; see that docstring).  Not jitted
+    itself: called from the single-device jit entry
+    :func:`_mj_run_chunked` and from inside the ``shard_map`` body of
+    :func:`_mj_run_chunked_sharded`."""
     R_draw = _next_pow2(R)
 
     def scan_body(state, u):
@@ -701,10 +702,86 @@ def _mj_run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
     return state
 
 
+@partial(jax.jit, static_argnames=("P", "R", "chunk", "rem", "J", "impl",
+                                   "early_exit", "hist_channels"))
+def _mj_run_chunked(pv: jnp.ndarray, key: jax.Array, P: int, R: int,
+                    chunk: int, n_chunks, rem: int, J: int,
+                    impl: Optional[str], early_exit: bool,
+                    hist_channels: tuple,
+                    init_state: Dict[str, jnp.ndarray]):
+    """Single-device jit entry over :func:`_mj_chunk_loop`."""
+    return _mj_chunk_loop(pv, key, P, R, chunk, n_chunks, rem, J, impl,
+                          early_exit, hist_channels, init_state)
+
+
+@partial(jax.jit, static_argnames=("mesh", "P", "R", "chunk", "rem", "J",
+                                   "impl", "early_exit", "hist_channels"))
+def _mj_run_chunked_sharded(pv: jnp.ndarray, keys: jax.Array, P: int,
+                            R: int, chunk: int, n_chunks, rem: int, J: int,
+                            impl: Optional[str], early_exit: bool,
+                            hist_channels: tuple,
+                            init_state: Dict[str, jnp.ndarray], *, mesh):
+    """Replica-sharded twin of :func:`_mj_run_chunked` via ``shard_map``.
+
+    Same contract as the single-job
+    :func:`repro.core.vectorized._run_chunked_sharded`: state leaves
+    reshape ``(P*R, ...) -> (P, R, ...)`` and shard the replica axis
+    over the 1-D mesh, each shard runs :func:`_mj_chunk_loop` with its
+    own folded key, ``hist_edges`` rides along replicated, no
+    collectives (shards early-exit independently), and the ``out_specs``
+    concatenation is the cross-device merge.  A 1-device mesh is
+    bit-identical to :func:`_mj_run_chunked`.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    from repro.parallel import sharding as rsharding
+
+    n_shards = mesh.shape[rsharding.REPLICA_AXIS]
+    R_loc = R // n_shards
+    unbatched = {k: init_state[k] for k in _UNBATCHED if k in init_state}
+    state = {k: v.reshape((P, R) + v.shape[1:])
+             for k, v in init_state.items() if k not in unbatched}
+    rspec = PartitionSpec(None, rsharding.REPLICA_AXIS)
+    pv2 = pv.reshape((P, R, pv.shape[-1]))
+    out_specs = {k: rspec for k in list(state) + ["completed"]}
+
+    def body(keys_s, pv_s, n_chunks_s, unbatched_s, state_s):
+        flat = {k: v.reshape((P * R_loc,) + v.shape[2:])
+                for k, v in state_s.items()}
+        flat.update(unbatched_s)
+        out = _mj_chunk_loop(pv_s.reshape(P * R_loc, pv_s.shape[-1]),
+                             keys_s[0], P, R_loc, chunk, n_chunks_s, rem,
+                             J, impl, early_exit, hist_channels, flat)
+        for k in unbatched_s:
+            out.pop(k)
+        return {k: v.reshape((P, R_loc) + v.shape[1:])
+                for k, v in out.items()}
+
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(PartitionSpec(rsharding.REPLICA_AXIS), rspec,
+                  PartitionSpec(),
+                  {k: PartitionSpec() for k in unbatched},
+                  rsharding.replica_state_specs(state)),
+        out_specs=out_specs, check_rep=False,
+    )(keys, pv2, n_chunks, unbatched, state)
+    out = {k: v.reshape((P * R,) + v.shape[2:]) for k, v in out.items()}
+    out.update(unbatched)
+    return out
+
+
 def compile_cache_size() -> Optional[int]:
     """Compiled-program cache entries of the multi-job chunked driver
     (None when jax's private cache introspection is unavailable)."""
     fn = getattr(_mj_run_chunked, "_cache_size", None)
+    return fn() if callable(fn) else None
+
+
+def shard_compile_cache_size() -> Optional[int]:
+    """Compiled-program cache entries of the *sharded* multi-job driver
+    (same contract as :func:`compile_cache_size`)."""
+    fn = getattr(_mj_run_chunked_sharded, "_cache_size", None)
     return fn() if callable(fn) else None
 
 
@@ -775,7 +852,8 @@ def simulate_multijob_ctmc_sweep(
         chunk_steps: Optional[int] = None,
         early_exit: bool = True,
         bucketed: bool = True,
-        max_runs: Optional[int] = None) -> List[Dict[str, object]]:
+        max_runs: Optional[int] = None,
+        shards: Optional[int] = None) -> List[Dict[str, object]]:
     """Batched multi-job sweep: one compiled program per job-count group.
 
     ``points`` is a sequence of ``(cluster Params, [JobSpec, ...])``
@@ -825,6 +903,11 @@ def simulate_multijob_ctmc_sweep(
 
     results: List[Optional[Dict[str, object]]] = [None] * len(points)
     channels = _selected_channels(points[0][0].histogram)
+    # replica sharding + kernel dispatch resolve exactly like the
+    # single-job sweep: explicit args win, else the (single) Params
+    # value — a mixed engine_shards grid raises, mixed kernel impls
+    # split the compile groups
+    shards = vz._resolve_shards(shards, [c for c, _ in points])
 
     # group: the single-job reduction, then one group per job count
     single_idx = [i for i, (c, js) in enumerate(points)
@@ -838,15 +921,16 @@ def simulate_multijob_ctmc_sweep(
         outs = vz.simulate_ctmc_sweep(
             sp, n_replicas=n_replicas, seed=seed, max_steps=max_steps,
             impl=impl, chunk_steps=chunk_steps, early_exit=early_exit,
-            bucketed=bucketed, max_runs=max_runs)
+            bucketed=bucketed, max_runs=max_runs, shards=shards)
         for i, arr in zip(single_idx, outs):
             results[i] = _wrap_single_job(arr)
 
-    groups: Dict[int, list] = {}
+    groups: Dict[tuple, list] = {}
     for i, (c, js) in enumerate(points):
         if results[i] is None:
-            groups.setdefault(len(js), []).append(i)
-    for J, idxs in groups.items():
+            impl_eff = impl if impl is not None else c.event_race_impl
+            groups.setdefault((len(js), impl_eff), []).append(i)
+    for (J, impl_eff), idxs in groups.items():
         pts = [points[i] for i in idxs]
         P, R = len(pts), n_replicas
         steps = max_steps or max(default_max_steps_multijob(c, js)
@@ -865,10 +949,17 @@ def simulate_multijob_ctmc_sweep(
         init_state = _mj_initial_state_batch(pts, R, mr)
         if (P_run, R_run) != (P, R):
             init_state = _mj_bucket_pad(init_state, P, R, P_run, R_run)
-        out = _mj_run_chunked(pv_flat, jax.random.PRNGKey(seed), P_run,
-                              R_run, chunk, jnp.int32(steps // chunk),
-                              steps % chunk, J, impl, early_exit,
-                              channels, init_state)
+        run_args = (P_run, R_run, chunk, jnp.int32(steps // chunk),
+                    steps % chunk, J, impl_eff, early_exit, channels,
+                    init_state)
+        key = jax.random.PRNGKey(seed)
+        if shards:
+            from repro.parallel import sharding as rsharding
+            out = _mj_run_chunked_sharded(
+                pv_flat, rsharding.shard_keys(key, shards), *run_args,
+                mesh=vz._shard_mesh(shards, R_run))
+        else:
+            out = _mj_run_chunked(pv_flat, key, *run_args)
         for jg, i in enumerate(idxs):
             rows = (slice(jg * R_run, jg * R_run + R) if R_run == R
                     else np.arange(R) + jg * R_run)

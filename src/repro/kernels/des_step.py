@@ -9,10 +9,26 @@ independent replicas, race K_exp exponential clock families (propensities
             K_exp + argmin residual otherwise
 
 This is pure VPU work — log, cumsum over a tiny K axis, compares — tiled
-over the replica axis in VMEM blocks of ``block_r``.  K_exp/K_det are
-padded to the lane width by ops.py.
+over the replica axis in VMEM blocks of ``block_r`` (grid = replica
+blocks, all parallel).  The caller (ops.event_race) pads:
 
-Validated in interpret mode against ref.event_race_ref.
+* the replica axis up to a whole number of sublane-aligned blocks with
+  inert rows (zero rates, +inf residuals) that are sliced off after;
+* the K lanes up to multiples of 8 — padded *rate* lanes carry 0 and
+  padded *residual* lanes carry +inf, both provably inert (a zero rate
+  leaves the total and the pick-CDF unchanged; +inf never argmin-wins
+  against any finite residual, and an all-+inf tie resolves to lane 0
+  exactly like the unpadded argmin);
+* the two per-replica uniforms into one stacked (R, 2) ref, and the two
+  scalar outputs into (R, 1) refs — TPU-friendly 2-D layouts.
+
+The *real* lane counts enter as static kernel parameters so the
+categorical pick clips to the real exponential lanes and the
+deterministic winner index is remapped to ``k_exp_real + argmin``,
+keeping the event numbering identical to ref.event_race_ref.
+
+Validated in interpret mode against ref.event_race_ref on CPU CI
+(tests/test_kernels.py sweeps padded and unpadded K-lane shapes).
 """
 
 from __future__ import annotations
@@ -23,43 +39,54 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams as _CompilerParams
 
 
-def _event_race_kernel(rates_ref, residuals_ref, u_time_ref, u_pick_ref,
-                       dt_ref, event_ref, *, k_exp: int, k_det: int):
-    rates = rates_ref[...].astype(jnp.float32)          # (bR, Kexp)
-    residuals = residuals_ref[...].astype(jnp.float32)  # (bR, Kdet)
-    u_time = u_time_ref[...].astype(jnp.float32)        # (bR,)
-    u_pick = u_pick_ref[...].astype(jnp.float32)
+def _event_race_kernel(rates_ref, residuals_ref, u_ref, dt_ref, event_ref,
+                       *, k_exp: int, k_det: int):
+    """One replica block.  ``k_exp``/``k_det`` are the REAL lane counts;
+    the refs may carry padded lanes (zero rates / +inf residuals)."""
+    rates = rates_ref[...].astype(jnp.float32)          # (bR, Kexp_pad)
+    residuals = residuals_ref[...].astype(jnp.float32)  # (bR, Kdet_pad)
+    u = u_ref[...].astype(jnp.float32)                  # (bR, 2)
+    u_time, u_pick = u[:, 0], u[:, 1]
 
     total = jnp.sum(rates, axis=-1)                     # (bR,)
     safe = jnp.maximum(total, 1e-30)
     t_exp = -jnp.log(jnp.maximum(u_time, 1e-38)) / safe
     t_exp = jnp.where(total > 0.0, t_exp, jnp.float32(jnp.inf))
 
-    cdf = jnp.cumsum(rates, axis=-1) / safe[:, None]    # (bR, Kexp)
+    # padded rate lanes are zero, so their cdf entries saturate at 1.0
+    # and u_pick < 1 never counts them; clip to the real lanes anyway
+    cdf = jnp.cumsum(rates, axis=-1) / safe[:, None]    # (bR, Kexp_pad)
     pick_exp = jnp.sum((u_pick[:, None] >= cdf).astype(jnp.int32), axis=-1)
     pick_exp = jnp.minimum(pick_exp, k_exp - 1)
 
+    # padded residual lanes are +inf: never the strict minimum, and an
+    # all-+inf row argmins to 0 — identical to the unpadded reference
     t_det = jnp.min(residuals, axis=-1)
     pick_det = jnp.argmin(residuals, axis=-1).astype(jnp.int32) + k_exp
 
     exp_wins = t_exp <= t_det
-    dt_ref[...] = jnp.minimum(t_exp, t_det)
-    event_ref[...] = jnp.where(exp_wins, pick_exp, pick_det)
+    dt_ref[...] = jnp.minimum(t_exp, t_det)[:, None]
+    event_ref[...] = jnp.where(exp_wins, pick_exp, pick_det)[:, None]
 
 
 def event_race_fwd(rates: jax.Array, residuals: jax.Array,
-                   u_time: jax.Array, u_pick: jax.Array, *,
+                   u2: jax.Array, *, k_exp: int, k_det: int,
                    block_r: int = 1024, interpret: bool = False,
                    ) -> Tuple[jax.Array, jax.Array]:
-    """rates (R, K_exp), residuals (R, K_det), uniforms (R,) -> (dt, event)."""
-    R, k_exp = rates.shape
-    _, k_det = residuals.shape
-    block_r = min(block_r, R)
+    """Blocked kernel dispatch over pre-padded inputs.
+
+    rates (R_pad, Kexp_pad), residuals (R_pad, Kdet_pad), u2 (R_pad, 2)
+    -> (dt (R_pad,), event (R_pad,)).  ``R_pad`` must be a multiple of
+    ``block_r``; ``k_exp``/``k_det`` are the real lane counts (see
+    module docstring).  ops.event_race does all the padding/slicing —
+    call that, not this.
+    """
+    R, ke_pad = rates.shape
+    _, kd_pad = residuals.shape
     assert R % block_r == 0, (R, block_r)
     grid = (R // block_r,)
 
@@ -68,21 +95,20 @@ def event_race_fwd(rates: jax.Array, residuals: jax.Array,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_r, k_exp), lambda r: (r, 0)),
-            pl.BlockSpec((block_r, k_det), lambda r: (r, 0)),
-            pl.BlockSpec((block_r,), lambda r: (r,)),
-            pl.BlockSpec((block_r,), lambda r: (r,)),
+            pl.BlockSpec((block_r, ke_pad), lambda r: (r, 0)),
+            pl.BlockSpec((block_r, kd_pad), lambda r: (r, 0)),
+            pl.BlockSpec((block_r, 2), lambda r: (r, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_r,), lambda r: (r,)),
-            pl.BlockSpec((block_r,), lambda r: (r,)),
+            pl.BlockSpec((block_r, 1), lambda r: (r, 0)),
+            pl.BlockSpec((block_r, 1), lambda r: (r, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R,), jnp.float32),
-            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(rates, residuals, u_time, u_pick)
-    return dt, event
+    )(rates, residuals, u2)
+    return dt[:, 0], event[:, 0]

@@ -160,16 +160,71 @@ def selective_scan_step(x_t, dt_t, A, B_t, C_t, h):
 # DES event race
 # ---------------------------------------------------------------------------
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
 def event_race(rates: jax.Array, residuals: jax.Array, u_time: jax.Array,
                u_pick: jax.Array, *, impl: Optional[str] = None,
                block_r: int = 1024) -> Tuple[jax.Array, jax.Array]:
-    """Next-event race; see des_step.py. No gradients (simulation only)."""
+    """Next-event race; see des_step.py. No gradients (simulation only).
+
+    ``impl``: None auto-selects (``"pallas"`` on TPU, ``"ref"``
+    elsewhere); ``"ref"`` is the always-available pure-jnp path;
+    ``"pallas"`` requires a TPU backend and raises otherwise (use
+    ``"pallas_interpret"`` — the kernel body executed op-by-op on CPU —
+    for validation).  The kernel path pads the replica axis to whole
+    sublane-aligned blocks and the K lanes to multiples of 8 with inert
+    values (see des_step.py); padding is sliced off before returning,
+    so every (R, K_exp, K_det) shape runs the kernel — there is no
+    silent shape fallback.  Zero-width lane blocks are invalid on every
+    backend (the reference cannot reduce them either) and raise.
+
+    With all rates zero the deterministic side wins and the event index
+    is ``K_exp + argmin(residuals)`` — identical across backends:
+
+    >>> rates = jnp.zeros((1, 2))
+    >>> resid = jnp.asarray([[3.0, 1.5]])
+    >>> u = jnp.asarray([0.5])
+    >>> dt, ev = event_race(rates, resid, u, u, impl="ref")
+    >>> float(dt[0]), int(ev[0])
+    (1.5, 3)
+    >>> dt, ev = event_race(rates, resid, u, u, impl="pallas_interpret")
+    >>> float(dt[0]), int(ev[0])
+    (1.5, 3)
+    """
     impl = impl or _default_impl()
     if impl == "ref":
         return ref.event_race_ref(rates, residuals, u_time, u_pick)
-    interpret = impl == "pallas_interpret"
-    R = rates.shape[0]
-    if R % min(block_r, R):
-        return ref.event_race_ref(rates, residuals, u_time, u_pick)
-    return event_race_fwd(rates, residuals, u_time, u_pick,
-                          block_r=min(block_r, R), interpret=interpret)
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        raise ValueError(
+            f"event_race impl='pallas' requires a TPU backend (default "
+            f"backend here is {jax.default_backend()!r}); use "
+            f"impl='pallas_interpret' for CPU validation or impl='ref' "
+            f"for the pure-jnp path (docs/scaling.md)")
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(
+            f"event_race impl={impl!r} must be None, 'ref', 'pallas', "
+            f"or 'pallas_interpret'")
+    R, k_exp = rates.shape
+    k_det = residuals.shape[1]
+    if k_exp == 0 or k_det == 0:
+        raise ValueError(
+            f"event_race needs at least one exponential and one "
+            f"deterministic lane (got K_exp={k_exp}, K_det={k_det}); a "
+            f"zero-width lane block has no next event to race — disable "
+            f"the empty side with zero rates / +inf residuals instead")
+    # pad K lanes to sublane multiples with inert values, the replica
+    # axis to a whole number of blocks with inert rows (see des_step.py)
+    ke_pad, kd_pad = _round_up(k_exp, 8), _round_up(k_det, 8)
+    block = min(block_r, _round_up(R, 8))
+    r_pad = _round_up(R, block)
+    rates_p = jnp.pad(rates, ((0, r_pad - R), (0, ke_pad - k_exp)))
+    resid_p = jnp.pad(residuals, ((0, r_pad - R), (0, kd_pad - k_det)),
+                      constant_values=jnp.inf)
+    u2 = jnp.stack([u_time, u_pick], axis=-1)           # (R, 2)
+    u2 = jnp.pad(u2, ((0, r_pad - R), (0, 0)), constant_values=0.5)
+    dt, event = event_race_fwd(rates_p, resid_p, u2, k_exp=k_exp,
+                               k_det=k_det, block_r=block,
+                               interpret=impl == "pallas_interpret")
+    return dt[:R], event[:R]

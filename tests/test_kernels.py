@@ -178,7 +178,12 @@ def test_selective_scan_step_matches_scan():
 # DES event race
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("R,Ke,Kd", [(64, 4, 2), (256, 16, 4), (1024, 18, 2)])
+@pytest.mark.parametrize("R,Ke,Kd", [
+    (64, 4, 2), (256, 16, 4), (1024, 18, 2),
+    # padded paths: replica axis not a block multiple, K lanes far off
+    # the sublane width, degenerate single-lane races
+    (100, 3, 1), (8, 1, 1), (130, 9, 5), (96, 23, 7),
+])
 def test_event_race_matches_ref(R, Ke, Kd):
     rng = np.random.default_rng(R)
     rates = jnp.asarray(rng.uniform(0, 2, (R, Ke)).astype(np.float32))
@@ -203,6 +208,36 @@ def test_event_race_all_rates_zero_picks_deterministic():
     dt, ev = ref.event_race_ref(rates, resid, ut, up)
     assert np.allclose(np.asarray(dt), 1.5)
     assert (np.asarray(ev) == 4 + 1).all()
+
+
+def test_event_race_pallas_off_tpu_refused():
+    """An explicit compiled-pallas request off-TPU names the config and
+    the escape hatches instead of silently de-materializing."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("compiled pallas is legitimate on TPU")
+    rates = jnp.ones((8, 2), jnp.float32)
+    resid = jnp.ones((8, 2), jnp.float32)
+    u = jnp.full((8,), 0.5, jnp.float32)
+    with pytest.raises(ValueError, match="pallas_interpret"):
+        ops.event_race(rates, resid, u, u, impl="pallas")
+
+
+def test_event_race_unknown_impl_refused():
+    rates = jnp.ones((8, 2), jnp.float32)
+    u = jnp.full((8,), 0.5, jnp.float32)
+    with pytest.raises(ValueError, match="impl"):
+        ops.event_race(rates, rates, u, u, impl="vulkan")
+
+
+def test_event_race_zero_lane_refused():
+    """K_det=0 has no next event to race on either side of the dispatch
+    (ref cannot reduce a zero-width axis either) — refuse by name."""
+    R = 16
+    rates = jnp.ones((R, 2), jnp.float32)
+    resid = jnp.zeros((R, 0), jnp.float32)
+    u = jnp.full((R,), 0.5, jnp.float32)
+    with pytest.raises(ValueError, match="zero-width lane"):
+        ops.event_race(rates, resid, u, u, impl="pallas_interpret")
 
 
 def test_event_race_statistics():
